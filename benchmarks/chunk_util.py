@@ -1,0 +1,33 @@
+"""Table 1 — Prefill chunk utilization and max sustainable QPS, batch
+scheduling Off vs On, at a fixed mean-TTFT constraint."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import find_peak_qps, prefill_serving_cfg, run_prefill
+from repro.serving.workload import SHORT
+
+
+def main(report) -> List[str]:
+    rows: List[str] = []
+    report("\n## Table 1: chunk utilization + max QPS @ mean-TTFT constraint")
+    report(f"{'scenario':>22} {'batch':>6} {'QPS':>5} {'chunk util':>11} "
+           f"{'ΔQPS':>7} {'Δutil':>7}")
+    for chunk, slo in ((3072, 0.8), (5120, 1.0)):
+        scfg = prefill_serving_cfg(chunk=chunk)
+        base = {}
+        for sched, name in (("immediate-rr", "Off"), ("sbs", "On")):
+            peak = find_peak_qps(sched, slo, SHORT, scfg)
+            rep = run_prefill(sched, peak, 15.0, SHORT, scfg)
+            if name == "Off":
+                base = {"qps": peak, "util": rep.chunk_util}
+                dq = du = ""
+            else:
+                dq = f"+{(peak/base['qps']-1)*100:.1f}%"
+                du = f"+{(rep.chunk_util-base['util'])*100:.1f}pp"
+            report(f"{'Chunk %dK (TTFT=%.1fs)' % (chunk//1024, slo):>22} "
+                   f"{name:>6} {peak:>5.0f} {rep.chunk_util*100:>10.1f}% "
+                   f"{dq:>7} {du:>7}")
+            rows.append(f"chunk_util/{chunk}/{name},{peak:.0f},"
+                        f"util={rep.chunk_util*100:.1f}%")
+    return rows

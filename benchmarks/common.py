@@ -1,0 +1,53 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.config import ServingConfig, get_arch
+from repro.serving.cluster import PrefillClusterSim
+from repro.serving.workload import SPECS, WorkloadSpec, generate
+
+ARCH = "deepseek-v3-671b"            # the paper's production model
+
+
+def prefill_serving_cfg(chunk: int = 3072, instances: int = 3,
+                        dp: int = 8, **kw) -> ServingConfig:
+    # T_default comes from "offline stress testing" (paper §4.1.1) — here,
+    # the roofline cost model priced at a full chunk pass.
+    from repro.serving.costmodel import CostModel
+    t_default = CostModel(get_arch(ARCH)).prefill_dp_time(chunk)
+    base = dict(num_prefill_instances=instances, prefill_dp_per_instance=dp,
+                chunk_size=chunk, t_default=t_default)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+def run_prefill(scheduler: str, qps: float, duration: float,
+                spec: WorkloadSpec, scfg: ServingConfig, seed: int = 0):
+    cfg = get_arch(ARCH)
+    reqs = generate(spec, qps=qps, duration=duration, seed=seed)
+    sim = PrefillClusterSim(cfg, scfg, scheduler=scheduler)
+    return sim.run(reqs, duration)
+
+
+def find_peak_qps(scheduler: str, slo_ttft: float, spec: WorkloadSpec,
+                  scfg: ServingConfig, duration: float = 12.0,
+                  lo: float = 10.0, hi: float = 400.0, iters: int = 8
+                  ) -> float:
+    """Binary-search the max QPS whose mean TTFT meets the SLO (paper §5.1
+    'benchmark the baseline to determine its peak QPS')."""
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        rep = run_prefill(scheduler, mid, duration, spec, scfg)
+        if rep.ttft_mean <= slo_ttft and rep.rejected == 0:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)

@@ -1,0 +1,32 @@
+"""End-to-end P/D-disaggregated pipeline (3P1D): SBS on both phases vs
+immediate dispatch — TTFT, TPOT, and goodput including the KV transfer."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.config import ServingConfig, get_arch
+from repro.serving.e2e import PDClusterSim
+from repro.serving.workload import WorkloadSpec, generate
+
+from benchmarks.common import ARCH
+
+
+def main(report) -> List[str]:
+    rows: List[str] = []
+    cfg = get_arch(ARCH)
+    scfg = ServingConfig(num_prefill_instances=3, prefill_dp_per_instance=8,
+                         num_decode_instances=1, decode_dp_per_instance=32,
+                         chunk_size=3072, t_default=0.5,
+                         max_batch_per_dp=64, kv_budget_tokens=400_000)
+    spec = WorkloadSpec("e2e", 64, 3000, 1000.0, out_mean=120)
+    report("\n## E2E 3P1D pipeline (prefill pool → KV transfer → decode pool)")
+    report(f"{'scheduler':>12} {'qps':>5}  result")
+    for qps in (40, 70):
+        for sched in ("immediate", "sbs"):
+            reqs = generate(spec, qps=qps, duration=15, seed=11)
+            sim = PDClusterSim(cfg, scfg, scheduler=sched)
+            rep = sim.run(reqs, 15, slo_e2e=15.0)
+            report(f"{sched:>12} {qps:>5}  {rep.row()}")
+            rows.append(f"e2e/{sched}/qps={qps},{rep.ttft_mean*1e6:.0f},"
+                        f"goodput={rep.goodput*100:.1f}%")
+    return rows

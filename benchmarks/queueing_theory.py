@@ -1,0 +1,29 @@
+"""§3.2 theory check — expected wait: immediate T/2 vs staggered T/(2N)."""
+from __future__ import annotations
+
+import random
+from typing import List
+
+
+def simulate(n_inst: int, T: float = 1.0, n: int = 50_000, seed: int = 0):
+    rng = random.Random(seed)
+    arrivals = [rng.uniform(0, 1000.0) for _ in range(n)]
+    phases = [rng.uniform(0, T) for _ in range(n_inst)]
+    w_imm = [(phases[i % n_inst] - t) % T for i, t in enumerate(arrivals)]
+    w_stag = [min((k * T / n_inst - t) % T for k in range(n_inst))
+              for t in arrivals]
+    return (sum(w_imm) / n, sum(w_stag) / n)
+
+
+def main(report) -> List[str]:
+    rows = []
+    report("## §3.2 queueing theory: E[wait] immediate vs staggered (T=1)")
+    report(f"{'N':>4} {'immediate':>10} {'theory T/2':>10} "
+           f"{'staggered':>10} {'theory T/2N':>11} {'speedup':>8}")
+    for n in (2, 4, 8, 16, 32):
+        wi, ws = simulate(n)
+        rows.append(f"queueing_theory/N={n},{ws*1e6:.0f},"
+                    f"speedup={wi/ws:.1f}x")
+        report(f"{n:>4} {wi:>10.4f} {0.5:>10.4f} {ws:>10.4f} "
+               f"{0.5/n:>11.4f} {wi/ws:>7.1f}x")
+    return rows

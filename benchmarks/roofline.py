@@ -1,0 +1,70 @@
+"""§Roofline — aggregate the dry-run JSONs into the per-(arch × mesh) table.
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun. If the
+directory is missing the benchmark reports a pointer instead of failing
+(the dry-run needs 512 forced host devices — its own process)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(path: str = DIR):
+    recs = []
+    if not os.path.isdir(path):
+        return recs
+    for f in sorted(os.listdir(path)):
+        if f.endswith(".json"):
+            with open(os.path.join(path, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_opt")
+
+
+def _table(report, rows, recs, tag):
+    report(f"\n## Roofline [{tag}] per (arch × shape × mesh), per-device "
+           "seconds (v5e: 197 TF/s, 819 GB/s, 50 GB/s ICI)")
+    report(f"{'arch':>22} {'shape':>12} {'mesh':>8} {'compute':>9} "
+           f"{'memory':>9} {'collective':>10} {'bound':>7} {'useful':>7}")
+    ok = fail = skip = 0
+    for r in recs:
+        if r.get("status") == "skipped":
+            skip += 1
+            continue
+        if r.get("status") != "ok":
+            fail += 1
+            report(f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>8} FAILED "
+                   f"{r.get('error', '')[:60]}")
+            continue
+        ok += 1
+        rf = r["roofline"]
+        report(f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>8} "
+               f"{rf['compute_s']:>9.4f} {rf['memory_s']:>9.4f} "
+               f"{rf['collective_s']:>10.4f} "
+               f"{rf['bottleneck'].split('_')[0]:>7} "
+               f"{rf['useful_ratio']:>7.2f}")
+        rows.append(
+            f"roofline[{tag}]/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(rf['compute_s'], rf['memory_s'], rf['collective_s'])*1e6:.0f},"
+            f"bound={rf['bottleneck'].split('_')[0]}")
+    report(f"\n[{tag}] {ok} ok, {skip} skipped (documented), {fail} failed")
+
+
+def main(report) -> List[str]:
+    rows: List[str] = []
+    recs = load_records()
+    if not recs:
+        report("\n## Roofline: no dry-run records found — run "
+               "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return rows
+    _table(report, rows, recs, "baseline")
+    opt = load_records(OPT_DIR)
+    if opt:
+        _table(report, rows, opt, "optimized")
+    return rows

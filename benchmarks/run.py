@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints human-readable tables plus ``name,us_per_call,derived`` CSV lines
+(collected at the end under == CSV ==).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+BENCHES = [
+    ("queueing_theory", "§3.2 T/2 vs T/2N"),
+    ("ttft_vs_load", "Fig 6a/6b TTFT vs load"),
+    ("chunk_util", "Table 1 chunk utilization"),
+    ("decode_balance", "Fig 7/8 decode balance"),
+    ("cache_aware", "§4.2.2 cache-aware PBAA"),
+    ("e2e_pd", "E2E 3P1D pipeline w/ KV transfer"),
+    ("cross_arch", "SBS across architecture families"),
+    ("microbench", "scheduler decision latency"),
+    ("roofline", "§Roofline dry-run table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    csv: List[str] = ["name,us_per_call,derived"]
+    for mod_name, desc in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+        print(f"\n{'='*72}\n== {mod_name}: {desc}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            rows = mod.main(lambda s: print(s, flush=True))
+            csv.extend(rows or [])
+        except Exception as e:
+            print(f"BENCH FAILED: {e!r}")
+            csv.append(f"{mod_name},NaN,FAILED")
+        print(f"[{mod_name} took {time.time()-t0:.1f}s]")
+    print(f"\n{'='*72}\n== CSV ==\n{'='*72}")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Figure 6 — TTFT vs load, SBS vs immediate dispatch.
+
+6a: input 0–3K (mean ~1K), chunk 3K.   6b: input 3K–64K (mean ~6.7K),
+chunk 16K. Protocol follows §5.1: find the BASELINE's peak QPS at the TTFT
+SLO, then compare both systems at 40–100% of that load.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import find_peak_qps, prefill_serving_cfg, run_prefill
+from repro.serving.workload import LONG, SHORT
+
+
+def _figure(report, rows, spec, chunk, slo, tag):
+    scfg = prefill_serving_cfg(chunk=chunk)
+    peak = find_peak_qps("immediate-rr", slo, spec, scfg)
+    report(f"\n## Fig 6{tag}: workload={spec.name} chunk={chunk} "
+           f"baseline peak QPS @ SLO({slo*1000:.0f}ms) = {peak:.0f}")
+    report(f"{'load':>5} {'qps':>6} {'imm TTFT':>10} {'SBS TTFT':>10} "
+           f"{'ΔTTFT':>7} {'imm devq':>9} {'SBS devq':>9}")
+    for frac in (0.4, 0.6, 0.8, 1.0):
+        qps = peak * frac
+        imm = run_prefill("immediate-rr", qps, 12.0, spec, scfg)
+        sbs = run_prefill("sbs", qps, 12.0, spec, scfg)
+        d = 1 - sbs.ttft_mean / imm.ttft_mean
+        report(f"{frac*100:>4.0f}% {qps:>6.0f} "
+               f"{imm.ttft_mean*1000:>9.1f}ms {sbs.ttft_mean*1000:>9.1f}ms "
+               f"{d*100:>6.1f}% {imm.device_queue_mean*1000:>8.1f}ms "
+               f"{sbs.device_queue_mean*1000:>8.1f}ms")
+        rows.append(f"ttft_6{tag}/load={frac:.1f},"
+                    f"{sbs.ttft_mean*1e6:.0f},delta={d*100:.1f}%")
+    return rows
+
+
+def main(report) -> List[str]:
+    rows: List[str] = []
+    _figure(report, rows, SHORT, 3072, 0.9, "a")
+    _figure(report, rows, LONG, 16384, 4.0, "b")
+    return rows

@@ -1,0 +1,46 @@
+"""Reproduce the paper's production-scale experiments in the discrete-event
+simulator: the 3P1D DeepSeek-V3 cluster (§5) — TTFT vs load, chunk
+utilization, and decode balance.
+
+    PYTHONPATH=src python examples/simulate_production.py [--quick]
+"""
+import argparse
+
+from repro.config import ServingConfig, get_arch
+from repro.serving.cluster import DecodeClusterSim, PrefillClusterSim
+from repro.serving.workload import SHORT, WorkloadSpec, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    dur = 8.0 if args.quick else 20.0
+
+    cfg = get_arch("deepseek-v3-671b")
+    print("== Prefill: 3 instances × DP8, chunk 3K, DeepSeek-V3 ==")
+    scfg = ServingConfig(num_prefill_instances=3, prefill_dp_per_instance=8,
+                         chunk_size=3072, t_default=0.1)
+    for qps in (60, 100, 130):
+        line = [f"qps={qps:4d}"]
+        for sched in ("immediate-rr", "sbs"):
+            reqs = generate(SHORT, qps=qps, duration=dur, seed=0)
+            rep = PrefillClusterSim(cfg, scfg, scheduler=sched).run(reqs, dur)
+            line.append(f"{sched}: ttft={rep.ttft_mean*1000:6.1f}ms "
+                        f"util={rep.chunk_util*100:4.1f}%")
+        print("   ".join(line))
+
+    print("\n== Decode: DP=32, EP=32, closed-loop batch ≈ 35/DP ==")
+    dcfg = ServingConfig(num_decode_instances=1, decode_dp_per_instance=32,
+                         max_batch_per_dp=64, kv_budget_tokens=200_000)
+    spec = WorkloadSpec("decode", 256, 32768, 2000.0, out_mean=500)
+    for sched in ("immediate", "sbs"):
+        reqs = generate(spec, qps=10_000, duration=5, seed=1)[:15_000]
+        sim = DecodeClusterSim(cfg, dcfg, scheduler=sched)
+        rep = sim.run(reqs, 30.0 if args.quick else 60.0,
+                      closed_loop=32 * 35)
+        print(f"{sched:10s} {rep.row()}")
+
+
+if __name__ == "__main__":
+    main()

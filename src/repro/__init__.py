@@ -1,0 +1,8 @@
+"""repro: Staggered Batch Scheduling (SBS) - JAX serving framework.
+
+Implements Tian et al., "Staggered Batch Scheduling: Co-optimizing
+Time-to-First-Token and Throughput for High-Efficiency LLM Inference"
+(CS.DC 2025) as a production-shaped JAX serving/training framework.
+"""
+
+__version__ = "0.1.0"

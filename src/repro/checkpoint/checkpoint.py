@@ -1,0 +1,81 @@
+"""Pytree checkpointing to .npz (path-keyed, structure-preserving).
+
+Arrays are gathered to host before save; on load, the caller may re-shard
+with jax.device_put(..., sharding). Atomic via temp-file rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"step": step, "extra": extra or {}}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template: Any,
+                    step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of `template` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = "/".join(_path_str(p) for p in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta["step"], meta.get("extra", {})

@@ -1,0 +1,109 @@
+"""Algorithm 3 — IQR-Aware Lexicographical Decode Scheduling.
+
+Step 1 (Mask): DP units whose KV load exceeds Q3 + k·IQR are outliers —
+masked out of the decision space (fallback: all units if everything is
+saturated).
+Step 2 (Lexicographical select): among safe units pick
+argmin ⟨B_i, K_i⟩ — batch size first (parallel efficiency), KV load as the
+tie-breaker (memory pressure).
+Step 3: assign and update state.
+
+Requests are pre-sorted by total sequence length descending
+("fill-the-valley": place heavy requests while the decision space is rich).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.types import DecodeDPState, Request
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy 'linear' method)."""
+    if not values:
+        raise ValueError("empty")
+    v = sorted(values)
+    if len(v) == 1:
+        return float(v[0])
+    rank = (len(v) - 1) * q / 100.0
+    lo = int(rank)
+    hi = min(lo + 1, len(v) - 1)
+    frac = rank - lo
+    return float(v[lo] * (1 - frac) + v[hi] * frac)
+
+
+def iqr_safe_set(units: Sequence[DecodeDPState], k: float = 1.5
+                 ) -> List[DecodeDPState]:
+    """Step 1 — outlier detection over the KV-load snapshot."""
+    kv = [u.kv_tokens for u in units]
+    q1, q3 = percentile(kv, 25), percentile(kv, 75)
+    th = q3 + k * (q3 - q1)
+    safe = [u for u in units if u.kv_tokens <= th]
+    # hard budgets also mask (memory exhaustion risk)
+    safe = [u for u in safe
+            if u.batch < u.max_batch and u.kv_tokens < u.kv_budget]
+    if not safe:
+        safe = list(units)      # fallback: all saturated
+    return safe
+
+
+def lex_compare(a: DecodeDPState, b: DecodeDPState) -> bool:
+    """LexCompare(i, j): (B_i < B_j) or (B_i == B_j and K_i < K_j)."""
+    return (a.batch < b.batch) or (a.batch == b.batch
+                                   and a.kv_tokens < b.kv_tokens)
+
+
+def schedule_decode_batch(
+    requests: Sequence[Request],
+    units: Sequence[DecodeDPState],
+    k: float = 1.5,
+) -> Dict[int, List[Request]]:
+    """ScheduleBatch(R, N) — returns dp_id -> assigned requests and updates
+    unit states in place."""
+    out: Dict[int, List[Request]] = {}
+    # Length-Based Pre-Sorting (fill-the-valley)
+    order = sorted(requests,
+                   key=lambda r: -(r.input_len + r.output_len))
+    for req in order:
+        safe = iqr_safe_set(units, k)
+        best: Optional[DecodeDPState] = None
+        for u in safe:
+            if best is None or lex_compare(u, best):
+                best = u
+        assert best is not None
+        kv_len = req.input_len + req.generated
+        best.admit(kv_len)
+        req.assigned_dp = best.dp_id
+        out.setdefault(best.dp_id, []).append(req)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Immediate-dispatch decode baselines (paper's comparison point)
+# ---------------------------------------------------------------------------
+
+def schedule_decode_immediate(
+    requests: Sequence[Request],
+    units: Sequence[DecodeDPState],
+    policy: str = "round_robin",
+    rr_state: Optional[List[int]] = None,
+) -> Dict[int, List[Request]]:
+    """Baselines: round_robin | least_batch | least_kv. No global window —
+    each request is placed in arrival order with instantaneous state only."""
+    out: Dict[int, List[Request]] = {}
+    for req in requests:
+        if policy == "round_robin":
+            assert rr_state is not None
+            u = units[rr_state[0] % len(units)]
+            rr_state[0] += 1
+        elif policy == "least_batch":
+            u = min(units, key=lambda x: x.batch)
+        elif policy == "least_kv":
+            u = min(units, key=lambda x: x.kv_tokens)
+        else:
+            raise ValueError(policy)
+        kv_len = req.input_len + req.generated
+        u.admit(kv_len)
+        req.assigned_dp = u.dp_id
+        out.setdefault(u.dp_id, []).append(req)
+    return out

@@ -1,0 +1,44 @@
+"""Overload protection (Algorithm 2, phase 3).
+
+When a request fails allocation for N_limit consecutive cycles the system is
+saturated; the flow controller throttles (re-queue with backoff) or rejects,
+preventing system-wide congestion collapse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class FlowAction(str, enum.Enum):
+    ADMIT = "admit"
+    THROTTLE = "throttle"
+    REJECT = "reject"
+
+
+@dataclasses.dataclass
+class FlowControlStats:
+    throttled: int = 0
+    rejected: int = 0
+    admitted: int = 0
+
+
+class FlowController:
+    """Two-level policy: first breach throttles (backoff + re-queue at the
+    head, preserving FCFS), sustained breach rejects."""
+
+    def __init__(self, n_limit: int = 8, reject_after: int = 3):
+        self.n_limit = n_limit
+        self.reject_after = reject_after
+        self.stats = FlowControlStats()
+
+    def decide(self, wait_cycles: int) -> FlowAction:
+        if wait_cycles <= self.n_limit:
+            self.stats.admitted += 1
+            return FlowAction.ADMIT
+        if wait_cycles <= self.n_limit * self.reject_after:
+            self.stats.throttled += 1
+            return FlowAction.THROTTLE
+        self.stats.rejected += 1
+        return FlowAction.REJECT

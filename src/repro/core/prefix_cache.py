@@ -1,0 +1,117 @@
+"""Radix-tree prefix-cache index for cache-aware PBAA (§4.2.2).
+
+The scheduler keeps one radix tree PER DP UNIT (KV caches are DP-local in
+DP+EP systems). `match` returns the longest cached prefix length; `insert`
+records a processed prefix; LRU eviction under a token budget.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("edges", "last_used", "tokens")
+
+    def __init__(self):
+        self.edges: Dict[Tuple[int, ...], "_Node"] = {}
+        self.last_used = 0.0
+        self.tokens = 0   # tokens on the edge INTO this node
+
+
+class RadixTree:
+    """Compressed trie over token sequences with LRU eviction."""
+
+    def __init__(self, budget_tokens: int = 1_000_000, block: int = 16):
+        self.root = _Node()
+        self.budget = budget_tokens
+        self.block = block           # match granularity (KV block size)
+        self.size = 0
+        self._clock = 0.0
+
+    def _tick(self) -> float:
+        self._clock += 1.0
+        return self._clock
+
+    def _blocks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        t = tuple(tokens)
+        return [t[i:i + self.block] for i in range(0, len(t), self.block)]
+
+    def match(self, tokens: Sequence[int]) -> int:
+        """Longest cached prefix (in tokens, block-quantized)."""
+        if not tokens:
+            return 0
+        now = self._tick()
+        node, matched = self.root, 0
+        for blk in self._blocks(tokens):
+            nxt = node.edges.get(blk)
+            if nxt is None:
+                break
+            node, matched = nxt, matched + len(blk)
+            node.last_used = now
+        return matched
+
+    def insert(self, tokens: Sequence[int]) -> int:
+        """Insert prefix; returns newly added token count."""
+        now = self._tick()
+        node, added = self.root, 0
+        for blk in self._blocks(tokens):
+            nxt = node.edges.get(blk)
+            if nxt is None:
+                nxt = _Node()
+                nxt.tokens = len(blk)
+                node.edges[blk] = nxt
+                added += len(blk)
+            nxt.last_used = now
+            node = nxt
+        self.size += added
+        if self.size > self.budget:
+            self._evict(self.size - self.budget)
+        return added
+
+    def _evict(self, need: int) -> None:
+        """Evict least-recently-used leaves until `need` tokens are freed."""
+        freed = 0
+        while freed < need:
+            leaf = self._lru_leaf(self.root, None, None)
+            if leaf is None:
+                break
+            parent, key, node = leaf
+            parent.edges.pop(key)
+            freed += node.tokens
+        self.size -= freed
+
+    def _lru_leaf(self, node: "_Node", parent, key):
+        best = None
+        for k, child in node.edges.items():
+            if not child.edges:   # leaf
+                cand = (node, k, child)
+                if best is None or cand[2].last_used < best[2].last_used:
+                    best = cand
+            else:
+                cand = self._lru_leaf(child, node, k)
+                if cand is not None and (
+                        best is None or cand[2].last_used < best[2].last_used):
+                    best = cand
+        return best
+
+
+class PrefixCacheIndex:
+    """Per-DP radix trees, the scheduler-side model of engine KV reuse."""
+
+    def __init__(self, dp_ids: Sequence[int], budget_tokens: int = 1_000_000,
+                 block: int = 16):
+        self.trees: Dict[int, RadixTree] = {
+            d: RadixTree(budget_tokens, block) for d in dp_ids}
+
+    def match(self, dp_id: int, tokens: Optional[Sequence[int]],
+              limit: Optional[int] = None) -> int:
+        if tokens is None or dp_id not in self.trees:
+            return 0
+        m = self.trees[dp_id].match(tokens)
+        return min(m, limit) if limit is not None else m
+
+    def insert(self, dp_id: int, tokens: Optional[Sequence[int]]) -> int:
+        if tokens is None or dp_id not in self.trees:
+            return 0
+        return self.trees[dp_id].insert(tokens)

@@ -1,0 +1,265 @@
+"""The Staggered Batch Scheduler (SBS) main loop + immediate-dispatch
+baselines (paper §4, Figure 5).
+
+The scheduler is CLOCK-DRIVEN and ENGINE-AGNOSTIC: a driver (the
+discrete-event simulator in repro.serving.cluster, or the threaded real
+server in repro.serving.server) calls
+
+    on_arrival(req, now)      when a request enters the system
+    poll(now)                 -> list[DispatchCommand] to execute
+    on_end_forward(ev)        when an engine finishes a forward pass
+    next_event_time(now)      -> when poll() should next be called
+
+SBS dual trigger (§ Fig 5): dispatch happens when BOTH
+  (a) the adaptive interval I_opt has elapsed since the last dispatch, and
+  (b) the round-robin target instance is ready (quiescent, signaled, or
+      watchdog-reset — the multi-tier sync protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.decode_alloc import (
+    schedule_decode_batch, schedule_decode_immediate,
+)
+from repro.core.flow_control import FlowAction, FlowController
+from repro.core.interval import AdaptiveIntervalController
+from repro.core.prefill_alloc import chunk_utilization, pbaa
+from repro.core.prefix_cache import PrefixCacheIndex
+from repro.core.state import GlobalState
+from repro.core.sync import SyncProtocol
+from repro.core.types import (
+    DispatchCommand, EndForward, Request, RequestPhase,
+)
+
+
+class PrefillScheduler:
+    """Interface."""
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        raise NotImplementedError
+
+    def poll(self, now: float) -> List[DispatchCommand]:
+        raise NotImplementedError
+
+    def on_end_forward(self, ev: EndForward) -> None:
+        raise NotImplementedError
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        raise NotImplementedError
+
+
+class StaggeredBatchScheduler(PrefillScheduler):
+    def __init__(self, state: GlobalState, n_limit: int = 8,
+                 cache_aware: bool = False,
+                 prefix_cache: Optional[PrefixCacheIndex] = None,
+                 watchdog_multiplier: float = 5.0):
+        self.state = state
+        self.sync = SyncProtocol(state.num_prefill_instances,
+                                 watchdog_multiplier)
+        self.flow = FlowController(n_limit)
+        self.n_limit = n_limit
+        self.cache = prefix_cache if cache_aware else None
+        self.buffer: List[Request] = []     # scheduler-side queue (new)
+        self.pending: List[Request] = []    # PBAA leftovers (legacy)
+        self.rejected: List[Request] = []
+        self._target = 0                    # round-robin instance cursor
+        self._last_dispatch = -float("inf")
+        self._starved = False               # no capacity: wait for feedback
+        self.cycles = 0
+        self.util_history: List[float] = []
+
+    # ------------------------------------------------------------------
+    def on_arrival(self, req: Request, now: float) -> None:
+        req.phase = RequestPhase.QUEUED
+        self.buffer.append(req)
+        self._starved = False
+
+    def on_end_forward(self, ev: EndForward) -> None:
+        self.state.on_end_forward(ev)
+        self.sync.on_end_forward(ev.instance_id, ev.timestamp,
+                                 remaining=ev.remaining_tokens,
+                                 t_est=self.state.interval.t_fwd)
+        self._starved = False
+
+    # ------------------------------------------------------------------
+    def _interval_elapsed(self, now: float) -> bool:
+        return now - self._last_dispatch >= self.state.interval.interval - 1e-12
+
+    def poll(self, now: float) -> List[DispatchCommand]:
+        cmds: List[DispatchCommand] = []
+        # allow draining multiple ready instances in one poll (catch-up after
+        # a long gap), but each dispatch advances the staggered clock.
+        while ((self.buffer or self.pending) and not self._starved
+               and self._interval_elapsed(now)):
+            target = self._next_ready_instance(now)
+            if target is None:
+                self._starved = True     # all busy: wait for EndForward
+                break
+            cmd = self._dispatch_to(target, now)
+            if cmd is None:
+                self._starved = True     # no capacity anywhere: wait
+                break
+            cmds.append(cmd)
+            self._last_dispatch = now
+        return cmds
+
+    def _next_ready_instance(self, now: float) -> Optional[int]:
+        n = self.state.num_prefill_instances
+        # chunked-prefill tails are pinned to the DP holding their KV —
+        # prefer dispatching to instances with pinned pending work so long
+        # requests don't wait a full round-robin cycle between chunks
+        dp2inst = {d.dp_id: d.instance_id for d in self.state.prefill_dps}
+        pinned = {dp2inst[r.assigned_dp] for r in self.pending
+                  if r.assigned_dp is not None and r.assigned_dp in dp2inst}
+        candidates = [i for i in range(n) if i in pinned] + \
+            [(self._target + k) % n for k in range(n)]
+        for inst in candidates:
+            if self.sync.is_ready(inst, now):
+                self._target = (inst + 1) % n
+                return inst
+        return None
+
+    def _dispatch_to(self, inst: int, now: float) -> Optional[DispatchCommand]:
+        dps = self.state.prefill_dps_of(inst)
+        assignments, q_next, over = pbaa(
+            self.pending, self.buffer, dps, n_limit=self.n_limit,
+            cache=self.cache)
+        self.cycles += 1
+        self.util_history.append(chunk_utilization(assignments, dps))
+        # flow control on over-limit requests
+        kept: List[Request] = []
+        for r in over:
+            act = self.flow.decide(r.wait_cycles)
+            if act == FlowAction.REJECT:
+                r.phase = RequestPhase.REJECTED
+                self.rejected.append(r)
+            else:
+                kept.append(r)
+        self.pending = q_next + kept
+        self.buffer = []
+        if not assignments:
+            return None
+        for dp_id, lst in assignments.items():
+            for req, tok in lst:
+                req.phase = RequestPhase.DISPATCHED
+                req.assigned_instance = inst
+                if req.dispatch_time is None:
+                    req.dispatch_time = now
+                if self.cache is not None and req.tokens is not None:
+                    done = req.input_len - req.remaining_prefill
+                    self.cache.insert(dp_id, req.tokens[:done])
+        self.sync.on_dispatch(inst, now, self.state.interval.t_fwd)
+        return DispatchCommand(instance_id=inst, assignments=assignments,
+                               issue_time=now)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        cands = []
+        if (self.buffer or self.pending) and not self._starved:
+            cands.append(max(now,
+                             self._last_dispatch + self.state.interval.interval))
+        wd = self.sync.next_watchdog_deadline(now)
+        if wd is not None:
+            cands.append(wd)
+        return min(cands) if cands else None
+
+
+class ImmediatePrefillScheduler(PrefillScheduler):
+    """Baseline (§3.2): requests are bound to an instance the moment they
+    arrive and pile up in the engine's device-side queue (HOL blocking).
+    Policies: round_robin | least_tokens (least outstanding work)."""
+
+    def __init__(self, state: GlobalState, policy: str = "round_robin"):
+        self.state = state
+        self.policy = policy
+        self._rr = 0
+        self._out: List[DispatchCommand] = []
+        # outstanding tokens per instance (scheduler's naive view)
+        self._outstanding: Dict[int, int] = {
+            i: 0 for i in range(state.num_prefill_instances)}
+        self._dp_rr: Dict[int, int] = {
+            i: 0 for i in range(state.num_prefill_instances)}
+        self.rejected: List[Request] = []
+        self.util_history: List[float] = []
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        if self.policy == "round_robin":
+            inst = self._rr % self.state.num_prefill_instances
+            self._rr += 1
+        elif self.policy == "least_tokens":
+            inst = min(self._outstanding, key=self._outstanding.get)
+        else:
+            raise ValueError(self.policy)
+        dps = self.state.prefill_dps_of(inst)
+        j = self._dp_rr[inst] % len(dps)
+        self._dp_rr[inst] += 1
+        dp = dps[j]
+        req.phase = RequestPhase.DISPATCHED
+        req.assigned_instance = inst
+        req.assigned_dp = dp.dp_id
+        req.dispatch_time = now
+        self._outstanding[inst] += req.input_len
+        dp.on_dispatch(req.input_len)
+        req.remaining_prefill = 0   # whole request pushed to the device
+        self._out.append(DispatchCommand(
+            instance_id=inst,
+            assignments={dp.dp_id: [(req, req.input_len)]},
+            issue_time=now))
+
+    def poll(self, now: float) -> List[DispatchCommand]:
+        out, self._out = self._out, []
+        return out
+
+    def on_end_forward(self, ev: EndForward) -> None:
+        self.state.on_end_forward(ev)
+        self._outstanding[ev.instance_id] = max(
+            0, self._outstanding[ev.instance_id] - ev.processed_tokens)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        return now if self._out else None
+
+
+# ---------------------------------------------------------------------------
+# Decode-phase schedulers
+# ---------------------------------------------------------------------------
+
+class DecodeScheduler:
+    """SBS decode side: buffer hand-offs inside the batching window, then
+    IQR-aware lexicographical placement (Algorithm 3). mode='immediate'
+    degrades to the paper's baseline policies."""
+
+    def __init__(self, state: GlobalState, mode: str = "sbs",
+                 policy: str = "round_robin", iqr_k: float = 1.5,
+                 window: float = 0.05):
+        self.state = state
+        self.mode = mode
+        self.policy = policy
+        self.iqr_k = iqr_k
+        self.window = window
+        self.buffer: List[Request] = []
+        self._rr = [0]
+        self._last = -float("inf")
+
+    def on_handoff(self, req: Request, now: float) -> Optional[Dict]:
+        """Prefill finished; route into a decode DP. Immediate mode places
+        right away, SBS buffers until the window tick."""
+        if self.mode == "immediate":
+            return schedule_decode_immediate(
+                [req], self.state.decode_dps, self.policy, self._rr)
+        self.buffer.append(req)
+        return None
+
+    def poll(self, now: float) -> Optional[Dict]:
+        if self.mode == "immediate" or not self.buffer:
+            return None
+        if now - self._last < self.window - 1e-12:
+            return None
+        batch, self.buffer = self.buffer, []
+        self._last = now
+        return schedule_decode_batch(batch, self.state.decode_dps, self.iqr_k)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        if self.mode == "immediate" or not self.buffer:
+            return None
+        return max(now, self._last + self.window)

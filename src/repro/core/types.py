@@ -1,0 +1,134 @@
+"""Core datatypes for the SBS scheduler (paper §4, Figure 5).
+
+The scheduler's world is: requests, DP units (the atomic scheduling unit in
+DP+EP systems, §3.1), instances (groups of DP units joined by a
+synchronization barrier), and EndForward feedback signals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+
+class RequestPhase(str, enum.Enum):
+    QUEUED = "queued"            # scheduler-side queue (SBS buffer)
+    DISPATCHED = "dispatched"    # in flight to / inside an engine
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    REJECTED = "rejected"        # flow control
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_time: float
+    input_len: int
+    output_len: int = 1
+    tokens: Optional[Tuple[int, ...]] = None    # actual ids (prefix caching)
+    phase: RequestPhase = RequestPhase.QUEUED
+    # scheduling bookkeeping
+    wait_cycles: int = 0                        # PBAA starvation counter
+    remaining_prefill: int = 0                  # tokens not yet prefetched
+    inflight: int = 0                           # granted, not yet processed
+    generated: int = 0
+    assigned_dp: Optional[int] = None
+    assigned_instance: Optional[int] = None
+    # timestamps
+    dispatch_time: Optional[float] = None
+    prefill_start: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    def __post_init__(self):
+        if self.remaining_prefill == 0:
+            self.remaining_prefill = self.input_len
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def queueing_delay(self) -> Optional[float]:
+        if self.dispatch_time is None:
+            return None
+        return self.dispatch_time - self.arrival_time
+
+    @property
+    def device_queue_delay(self) -> Optional[float]:
+        """HOL blocking inside the engine (paper §3.2: the unmanageable part)."""
+        if self.prefill_start is None or self.dispatch_time is None:
+            return None
+        return self.prefill_start - self.dispatch_time
+
+
+@dataclasses.dataclass
+class DPState:
+    """Real-time prefill capacity model (paper §4.2.1):
+    C_avail = C_chunk − U_flight − R_queued."""
+    dp_id: int
+    instance_id: int
+    c_chunk: int
+    u_flight: int = 0       # dispatched but unacknowledged tokens
+    r_queued: int = 0       # backlog buffered on the device
+
+    @property
+    def c_avail(self) -> int:
+        return self.c_chunk - self.u_flight - self.r_queued
+
+    def on_dispatch(self, tokens: int) -> None:
+        self.u_flight += tokens
+
+    def on_end_forward(self, processed: int, remaining: int) -> None:
+        """EndForward payload: tokens consumed + backlog remaining (§ Fig 5)."""
+        self.u_flight = max(0, self.u_flight - processed - remaining)
+        self.r_queued = remaining
+
+
+@dataclasses.dataclass
+class DecodeDPState:
+    """Decode DP unit state vector V_i = ⟨B_i, K_i⟩ (paper §4.3.3)."""
+    dp_id: int
+    instance_id: int
+    batch: int = 0          # B_i — number of running decode requests
+    kv_tokens: int = 0      # K_i — total KV-cache tokens resident
+    max_batch: int = 10_000
+    kv_budget: int = 10 ** 12
+
+    def admit(self, kv_len: int) -> None:
+        self.batch += 1
+        self.kv_tokens += kv_len
+
+    def step(self) -> None:
+        self.kv_tokens += self.batch    # each running req grows by 1 token
+
+    def release(self, kv_len: int) -> None:
+        self.batch = max(0, self.batch - 1)
+        self.kv_tokens = max(0, self.kv_tokens - kv_len)
+
+
+@dataclasses.dataclass
+class EndForward:
+    """Asynchronous completion signal (paper §4.1.2 fast path)."""
+    instance_id: int
+    dp_id: int
+    exec_time: float               # measured forward-pass duration
+    processed_tokens: int = 0
+    remaining_tokens: int = 0      # backlog depth (payload statistics)
+    timestamp: float = 0.0
+
+
+@dataclasses.dataclass
+class DispatchCommand:
+    """Scheduler → engine: one batch for one instance's DP units."""
+    instance_id: int
+    # per-DP token budget map: dp_id -> list of (request, tokens_this_chunk)
+    assignments: Dict[int, List[Tuple[Request, int]]]
+    issue_time: float = 0.0
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(t for lst in self.assignments.values() for _, t in lst)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLM, synthetic_batches
+from repro.data.packing import pack_documents
+
+__all__ = ["SyntheticLM", "synthetic_batches", "pack_documents"]

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    param_pspecs, cache_pspecs, batch_pspecs, opt_pspecs, named,
+)
+
+__all__ = ["param_pspecs", "cache_pspecs", "batch_pspecs", "opt_pspecs",
+           "named"]

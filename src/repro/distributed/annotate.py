@@ -1,0 +1,73 @@
+"""Logical sharding annotations for model code.
+
+Model code is mesh-agnostic; launchers activate a mesh + logical-axis map
+(contextvar), and `constrain(x, *logical_axes)` becomes a
+`with_sharding_constraint` resolving logical names ("tokens", "experts",
+"model", "ffn", …) to mesh axes. Outside an activation it is a no-op, so
+tests and CPU paths are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, axis_map: Dict[str, Union[str, Tuple[str, ...]]],
+             ep_shard_map: bool = False):
+    """axis_map: logical name -> mesh axis (or tuple of axes).
+    ep_shard_map=True routes MoE blocks through the explicit all-to-all
+    shard_map path (repro.models.moe_ep) where applicable."""
+    token = _CTX.set({"mesh": mesh, "map": dict(axis_map),
+                      "ep": ep_shard_map})
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def active() -> Optional[Dict]:
+    return _CTX.get()
+
+
+def constrain(x, *logical_axes):
+    """Annotate `x` with the resolved PartitionSpec; no-op without a mesh.
+    Each entry is a logical axis name, None, or a tuple of names."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    amap = ctx["map"]
+    mesh = ctx["mesh"]
+
+    def resolve(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            out = []
+            for e in a:
+                r = amap.get(e)
+                if r is None:
+                    continue
+                out.extend((r,) if isinstance(r, str) else tuple(r))
+            return tuple(out) or None
+        r = amap.get(a)
+        return r
+
+    spec = P(*[resolve(a) for a in logical_axes])
+    # divisibility guard: skip annotation if any dim doesn't divide
+    import numpy as np
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % n != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

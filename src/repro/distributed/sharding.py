@@ -1,0 +1,295 @@
+"""Sharding rules: PartitionSpec pytrees for params / caches / batches.
+
+DP+EP mapping on the production mesh (DESIGN.md §3):
+  - "model"          TP: attention heads, FFN hidden, expert dim (EP)
+  - "data" (+"pod")  DP: batch; FSDP for params/optimizer when enabled;
+                     sequence for the long-context decode shape
+  - experts          sharded over `expert_axes` (("model",) by default;
+                     ("data","model") for DeepSeek-V3's 256 experts ⇒ exactly
+                     1 expert/chip on a 256-chip pod)
+
+Rules are divisibility-guarded: a dim is sharded only if it divides evenly by
+the axis size; otherwise the next candidate axis (or replication) is used —
+e.g. whisper's 20 heads don't divide 16, so its attention projections fall
+back to d_model (row-parallel) sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import (
+    AttentionKind, LayerKind, ModelConfig, ParallelConfig,
+)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return n > 0 and dim % n == 0
+
+
+class ShardingRules:
+    """Resolves per-leaf PartitionSpecs for one (cfg, mesh, parallel)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, par: ParallelConfig):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.par = par
+        self.model = par.model_axis if par.model_axis in mesh.axis_names else None
+        self.data: Tuple[str, ...] = tuple(
+            a for a in par.data_axes if a in mesh.axis_names)
+        if "pod" in mesh.axis_names and "pod" not in self.data:
+            self.data = ("pod",) + self.data
+        self.fsdp: Optional[Tuple[str, ...]] = (
+            tuple(a for a in par.fsdp_axes if a in mesh.axis_names)
+            if par.fsdp_params else None)
+        self.experts = tuple(a for a in par.expert_axes
+                             if a in mesh.axis_names) or (self.model,)
+
+    # -- helpers --------------------------------------------------------
+    def _maybe(self, dim: int, axes):
+        """axes if divisible else None."""
+        if axes is None:
+            return None
+        return axes if _fits(dim, self.mesh, axes) else None
+
+    def _fsdp_dim(self, shape, taken: Sequence[Optional[object]]):
+        """Pick the largest remaining dim divisible by the fsdp axes —
+        skipped entirely if any fsdp axis is already used by another dim."""
+        if not self.fsdp:
+            return None
+        used = set()
+        for t in taken:
+            if t is None:
+                continue
+            used.update((t,) if isinstance(t, str) else tuple(t))
+        if used & set(self.fsdp):
+            return None
+        best = None
+        for i, d in enumerate(shape):
+            if taken[i] is not None:
+                continue
+            if _fits(d, self.mesh, self.fsdp):
+                if best is None or d > shape[best]:
+                    best = i
+        return best
+
+    def matrix(self, shape, model_dim: Optional[int]) -> P:
+        """Generic 2-D+ weight: try model on `model_dim`, fsdp on the largest
+        other dim."""
+        spec: list = [None] * len(shape)
+        if model_dim is not None and self.model and \
+                _fits(shape[model_dim], self.mesh, self.model):
+            spec[model_dim] = self.model
+        i = self._fsdp_dim(shape, spec)
+        if i is not None:
+            spec[i] = self.fsdp
+        return P(*spec)
+
+    def expert_matrix(self, shape) -> P:
+        """(E, ..., ...): expert dim on expert_axes; fsdp on the largest
+        remaining dim."""
+        spec: list = [None] * len(shape)
+        ex = self.experts
+        if ex and _fits(shape[0], self.mesh, ex):
+            spec[0] = ex if len(ex) > 1 else ex[0]
+        elif self.model and _fits(shape[0], self.mesh, self.model):
+            spec[0] = self.model
+        i = self._fsdp_dim(shape, spec)
+        if i is not None:
+            spec[i] = self.fsdp
+        return P(*spec)
+
+    def replicated(self, shape) -> P:
+        return P(*([None] * len(shape)))
+
+
+# ---------------------------------------------------------------------------
+# Param specs (path-pattern based)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(rules: ShardingRules, path: Tuple[str, ...], leaf) -> P:
+    shape = leaf.shape
+    name = path[-1]
+    stacked = 1 if (len(path) >= 2 and path[0] in
+                    ("prefix", "blocks", "encoder")) else 0
+    # `stacked` leading layer axis is never sharded
+
+    def off(spec: P) -> P:
+        if stacked:
+            return P(*((None,) * stacked + tuple(spec)))
+        return spec
+
+    core = shape[stacked:]
+    r = rules
+    if name in ("embed",):                       # (V, D)
+        if _fits(core[0], r.mesh, r.model):
+            return off(r.matrix(core, 0))
+        return off(r.matrix(core, 1))
+    if name in ("lm_head",):                     # (D, V)
+        if _fits(core[1], r.mesh, r.model):
+            return off(r.matrix(core, 1))
+        return off(r.matrix(core, 0))
+    if name in ("w_q", "w_k", "w_v"):            # (D, H|K, hd)
+        if _fits(core[1], r.mesh, r.model):
+            return off(r.matrix(core, 1))
+        return off(r.matrix(core, 0))            # row-parallel fallback
+    if name == "w_o":                            # (H, hd, D)
+        if _fits(core[0], r.mesh, r.model):
+            return off(r.matrix(core, 0))
+        return off(r.matrix(core, 2))
+    if name in ("w_uq", "w_uk", "w_uv"):         # (r|qin, H, dn)
+        if _fits(core[1], r.mesh, r.model):
+            return off(r.matrix(core, 1))
+        return off(r.matrix(core, None))
+    if name in ("w_dq", "w_dkv", "w_kr", "proj"):
+        return off(r.matrix(core, None))
+    if name in ("w_gate", "w_up"):               # dense (D, ff) OR moe (E,D,f)
+        if len(core) == 3:
+            return off(r.expert_matrix(core))
+        return off(r.matrix(core, 1))
+    if name == "w_down":                         # (ff, D) OR (E, f, D)
+        if len(core) == 3:
+            return off(r.expert_matrix(core))
+        return off(r.matrix(core, 0))
+    if name == "router":                         # (D, E) — replicated f32
+        return off(r.matrix(core, None))
+    if name in ("shared_gate", "shared_up"):     # (D, f·n)
+        return off(r.matrix(core, 1))
+    if name == "shared_down":                    # (f·n, D)
+        return off(r.matrix(core, 0))
+    if name in ("w_zx", "w_dt"):                 # mamba (D, 2di) / (D, nh)
+        return off(r.matrix(core, 1) if _fits(core[1], r.mesh, r.model)
+                   else r.matrix(core, None))
+    if name == "w_bc":                           # (D, 2·g·ds) — tiny
+        return off(r.matrix(core, None))
+    if name == "out_proj":                       # (di, D)
+        return off(r.matrix(core, 0) if _fits(core[0], r.mesh, r.model)
+                   else r.matrix(core, None))
+    if name == "conv_wx":                        # (dconv, di) depthwise
+        return off(P(*([None] * (len(core) - 1)),
+                     r.model if _fits(core[-1], r.mesh, r.model) else None))
+    if name == "conv_bx":
+        return off(P(*([None] * (len(core) - 1)),
+                     r.model if _fits(core[-1], r.mesh, r.model) else None)
+                   if len(core) >= 1 else r.replicated(core))
+    if name in ("conv_wbc", "conv_bbc"):
+        return off(r.replicated(core))
+    # norms, biases, A_log, D_skip, dt_bias, router_bias, scalars
+    return off(r.replicated(core))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig, params):
+    rules = ShardingRules(cfg, mesh, par)
+
+    def visit(path, leaf):
+        keys = tuple(_key_str(p) for p in path)
+        return _leaf_spec(rules, keys, leaf)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch specs
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig, cache,
+                 batch_size: int):
+    """Decode-cache sharding. Batch on data axes when divisible; otherwise
+    (long_500k, B=1) the sequence axis is sharded on data. KV-head dim on
+    model when divisible, else the sequence axis goes on model (MLA latent)."""
+    rules = ShardingRules(cfg, mesh, par)
+    data = rules.data
+    model = rules.model
+    b_on_data = _fits(batch_size, mesh, data)
+
+    def leaf(path, x):
+        keys = [_key_str(p) for p in path]
+        shape = x.shape
+        if keys[0] in ("cur",):
+            return P(data) if b_on_data else P(None)
+        if keys[0] == "kv_pos":
+            if b_on_data:
+                return P(data, None)
+            return P(None, data) if _fits(shape[1], mesh, data) else P(None, None)
+        # stacked entries: (R, B, ...) — R never sharded
+        spec = [None] * len(shape)
+        if b_on_data and len(shape) >= 2:
+            spec[1] = data
+        if len(shape) == 5:          # (R,B,S,K,hd) attention KV
+            if model and _fits(shape[3], mesh, model):
+                spec[3] = model
+            elif model and _fits(shape[2], mesh, model):
+                spec[2] = model
+            if not b_on_data and _fits(shape[2], mesh, data) and spec[2] is None:
+                spec[2] = data
+        elif len(shape) == 4 and keys[-1] != "kv_pos":
+            # (R,B,S,r) MLA latent / rope cache  OR (R,B,nh,hp) …
+            if not b_on_data and _fits(shape[2], mesh, data):
+                spec[2] = data
+            elif model and _fits(shape[2], mesh, model) and shape[2] >= 256:
+                spec[2] = model
+        elif len(shape) == 3:
+            pass
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def data_axes_of(mesh: Mesh, par: ParallelConfig) -> Tuple[str, ...]:
+    axes = tuple(a for a in par.data_axes if a in mesh.axis_names)
+    if "pod" in mesh.axis_names and "pod" not in axes:
+        axes = ("pod",) + axes
+    return axes
+
+
+def batch_pspecs(mesh: Mesh, par: ParallelConfig, batch_size: int,
+                 tree) -> object:
+    data = data_axes_of(mesh, par)
+    b_on_data = _fits(batch_size, mesh, data)
+
+    def leaf(path, x):
+        shape = x.shape
+        spec = [None] * len(shape)
+        if b_on_data:
+            spec[0] = data
+        elif len(shape) >= 2 and _fits(shape[1], mesh, data):
+            spec[1] = data          # shard sequence (long-context)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def opt_pspecs(param_specs):
+    """Optimizer moments mirror the param specs; step is replicated."""
+    return {
+        "mu": param_specs,
+        "nu": param_specs,
+        "step": P(),
+    }
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+flash_prefill/    — packed-varlen flash attention (segment-id masked): the
+                    compute unit behind the paper's C_chunk capacity model.
+decode_attention/ — GQA decode against the KV cache (memory-bound sweep).
+ssd_scan/         — Mamba2 SSD intra-chunk kernel (hybrid/SSM archs).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper; interpret=True on CPU), and ref.py (pure-jnp oracle
+swept against the kernel in tests).
+"""

@@ -1,0 +1,109 @@
+"""GQA decode-attention Pallas TPU kernel.
+
+One new token per sequence attends to its KV cache — the decode phase's
+memory-bound hot loop (it reads the entire cache every step; this is the K_i
+term that Algorithm 3 balances). Grid (batch·kv_head, kv_blocks) streams the
+cache through VMEM in (block_kv × head_dim) tiles; the online-softmax state
+for the G=H/K query heads rides in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kvpos_ref, pos_ref,
+                   o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, window: int, kv_blocks: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                  # (G, hd)
+    k = k_ref[0]                  # (bk, hd)
+    v = v_ref[0]
+    kvpos = kvpos_ref[0]          # (bk,)
+    pos = pos_ref[0, 0]           # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kvpos >= 0) & (kvpos <= pos)
+    if window > 0:
+        valid &= (pos - kvpos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[:, 0] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        out = jnp.where(l[:, None] > 0,
+                        acc_scr[...] / jnp.maximum(l, 1e-30)[:, None], 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,           # (B, H, hd) — one token per row
+    k_cache: jnp.ndarray,     # (B, S, K, hd)
+    v_cache: jnp.ndarray,
+    kv_pos: jnp.ndarray,      # (B, S) int32, -1 = empty
+    pos: jnp.ndarray,         # (B,) int32 current positions
+    *,
+    window: int = 0,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0, "cache length must be a block multiple"
+    nkv = S // block_kv
+
+    qr = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    kvpos_r = jnp.repeat(kv_pos[:, None], K, 1).reshape(B * K, S)
+    pos_r = jnp.repeat(pos[:, None], K, 1).reshape(B * K, 1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               kv_blocks=nkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * K, nkv),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, ik: (b, ik)),
+            pl.BlockSpec((1, 1), lambda b, ik: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, kvpos_r, pos_r)
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)

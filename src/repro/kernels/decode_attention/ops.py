@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the decode_attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_pos, pos, *,
+                     window: int = 0, block_kv: int = 256,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return decode_attention_pallas(
+        q, k_cache, v_cache, kv_pos, pos,
+        window=window, block_kv=block_kv, interpret=interpret)

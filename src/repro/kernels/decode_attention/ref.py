@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the decode_attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_pos, pos, window: int = 0):
+    """q (B,H,hd); caches (B,S,K,hd); kv_pos (B,S); pos (B,)."""
+    B, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window > 0:
+        valid &= (pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid.any(-1)[:, None, None, None], p, 0.0)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, H, hd)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_prefill.ops import flash_prefill
+
+__all__ = ["flash_prefill"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash_prefill kernel (identical semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, q_pos, kv_pos, q_seg, kv_seg,
+                      causal: bool = True, window: int = 0):
+    """q (B,Sq,H,hd), k/v (B,Skv,K,hd). Naive masked softmax attention with
+    packed-segment semantics: attend iff same segment, kv valid, causal
+    within segment (by absolute position), optional sliding window."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    mask = (kv_pos[:, None, :] >= 0) & (q_seg[:, :, None] == kv_seg[:, None, :])
+    mask &= q_seg[:, :, None] >= 0
+    if causal:
+        mask &= q_pos[:, :, None] >= kv_pos[:, None, :]
+    if window > 0:
+        mask &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_chunk_kernel_apply
+
+__all__ = ["ssd_chunk_kernel_apply"]

@@ -1,0 +1,15 @@
+"""Public jit'd wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_kernel_apply(x, dt, A, Bm, Cm, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return ssd_chunk_pallas(x, dt, A, Bm, Cm, interpret=interpret)

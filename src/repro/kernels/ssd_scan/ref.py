@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """Same contract as ssd_chunk_pallas (n_groups=1 broadcast).
+    x (B,nc,Q,nh,hp); dt (B,nc,Q,nh); A (nh,); Bm/Cm (B,nc,Q,ds)."""
+    B, nc, Q, nh, hp = x.shape
+    x32 = x.astype(jnp.float32)
+    B32 = Bm.astype(jnp.float32)
+    C32 = Cm.astype(jnp.float32)
+    dA = dt * A                                       # (B,nc,Q,nh)
+    dA_cum = jnp.cumsum(dA, axis=2)
+    rel = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], rel, -1e30))
+    CB = jnp.einsum("bcqn,bckn->bcqk", C32, B32)
+    att = CB[..., None] * L * dt[:, :, None, :, :]
+    y = jnp.einsum("bcqkh,bckhp->bcqhp", att, x32)
+    w = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum) * dt   # (B,nc,Q,nh)
+    st = jnp.einsum("bckh,bckn,bckhp->bchnp", w, B32, x32)
+    return y, st

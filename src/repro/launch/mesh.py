@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; everything else sees the real (1-device) platform.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod, 256 chips) or 2×16×16 (2 pods, 512 chips)."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for {shape}, have {len(devices)} — run via "
+            "launch/dryrun.py (it forces 512 host devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    import jax
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    need = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need])

@@ -1,0 +1,84 @@
+"""Serving launcher: run the SBS control plane.
+
+Two modes:
+  --mode sim   discrete-event cluster simulation at production scale
+               (reproduces the paper's §5 numbers; default)
+  --mode real  real JAX execution of a reduced model behind the SBS
+               scheduler (threaded engines, true chunked prefill + decode)
+
+    PYTHONPATH=src python -m repro.launch.serve --mode sim \
+        --arch deepseek-v3-671b --scheduler sbs --qps 100 --duration 20
+    PYTHONPATH=src python -m repro.launch.serve --mode real \
+        --arch deepseek-7b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import random
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sim", choices=["sim", "real"])
+    ap.add_argument("--arch", default="deepseek-v3-671b")
+    ap.add_argument("--scheduler", default="sbs",
+                    choices=["sbs", "immediate-rr", "immediate-lt"])
+    ap.add_argument("--workload", default="short",
+                    choices=["short", "long", "decode"])
+    ap.add_argument("--qps", type=float, default=100.0)
+    ap.add_argument("--duration", type=float, default=20.0)
+    ap.add_argument("--chunk", type=int, default=3072)
+    ap.add_argument("--prefill-instances", type=int, default=3)
+    ap.add_argument("--dp-per-instance", type=int, default=8)
+    ap.add_argument("--cache-aware", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.config.base import ServingConfig, get_arch
+
+    if args.mode == "sim":
+        from repro.serving.cluster import PrefillClusterSim
+        from repro.serving.workload import SPECS, generate
+        cfg = get_arch(args.arch)
+        scfg = ServingConfig(
+            num_prefill_instances=args.prefill_instances,
+            prefill_dp_per_instance=args.dp_per_instance,
+            chunk_size=args.chunk, cache_aware=args.cache_aware,
+            t_default=0.1)
+        reqs = generate(SPECS[args.workload], qps=args.qps,
+                        duration=args.duration, seed=args.seed,
+                        with_tokens=args.cache_aware,
+                        shared_prefix_prob=0.5 if args.cache_aware else 0.0)
+        sim = PrefillClusterSim(cfg, scfg, scheduler=args.scheduler)
+        rep = sim.run(reqs, args.duration)
+        print(f"{args.scheduler} @ {args.qps} qps: {rep.row()}")
+        return
+
+    # real execution (reduced model)
+    import jax
+    from repro.core.types import Request
+    from repro.models import init_params
+    from repro.serving.server import RealSBSServer
+    cfg = get_arch(args.arch, reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = random.Random(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        L = rng.randrange(16, 96)
+        reqs.append(Request(
+            rid=i, arrival_time=i * 0.05, input_len=L, output_len=8,
+            tokens=tuple(rng.randrange(cfg.vocab_size) for _ in range(L))))
+    srv = RealSBSServer(
+        cfg, params,
+        scheduler="sbs" if args.scheduler == "sbs" else "immediate",
+        max_len=160, max_new=8)
+    gens = srv.serve(reqs, timeout=300)
+    for g in gens:
+        print(f"rid={g.rid} ttft={g.ttft*1000:7.1f}ms tokens={g.tokens}")
+    print(f"served {len(gens)}/{len(reqs)}; "
+          f"adapted I_opt={srv.state.interval.interval*1000:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Abstract input specs + step functions for the multi-pod dry-run.
+
+`input_specs(cfg, shape)` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the step the shape exercises (train_step for
+training shapes, prefill/serve_step for inference shapes) — no device
+allocation ever happens; weights enter `.lower()` abstractly too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (
+    InputShape, ModelConfig, ParallelConfig, TrainConfig,
+)
+from repro.models import abstract_cache, abstract_params, decode_step, prefill
+from repro.models.model import forward_train
+from repro.train.optimizer import adamw_init, adamw_update
+from repro.train.schedule import make_schedule
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is this (arch × shape) combination runnable? (DESIGN.md §4 skips)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("full-attention arch: long_500k requires "
+                       "sub-quadratic attention (DESIGN.md §4)")
+    return True, ""
+
+
+def batch_inputs(cfg: ModelConfig, shape: InputShape,
+                 dtype=jnp.bfloat16) -> Dict:
+    """Abstract inputs for the step this shape lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((B, S), jnp.int32),
+            "targets": sds((B, S), jnp.int32),
+        }
+        if cfg.is_encoder_decoder:
+            batch["embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model), dtype)
+        elif cfg.num_patch_tokens:
+            batch["embeds"] = sds((B, cfg.num_patch_tokens, cfg.d_model), dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            out["embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model), dtype)
+        elif cfg.num_patch_tokens:
+            out["embeds"] = sds((B, cfg.num_patch_tokens, cfg.d_model), dtype)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    cache = abstract_cache(cfg, B, S, dtype)
+    return {"token": sds((B, 1), jnp.int32), "cache": cache}
+
+
+def make_step_fn(cfg: ModelConfig, shape: InputShape,
+                 tcfg: Optional[TrainConfig] = None, remat="block",
+                 gather_shardings=None):
+    """Returns (fn, donate_argnums). Signatures:
+    train:   fn(params, opt_state, batch) -> (params, opt_state, loss)
+    prefill: fn(params, tokens[, embeds]) -> (logits, cache)
+    decode:  fn(params, token, cache) -> (logits, cache)
+
+    gather_shardings (train + FSDP): NamedSharding tree WITHOUT the fsdp
+    axes. Weights are all-gathered at use via a sharding constraint (the
+    pjit ZeRO/FSDP idiom); autodiff transposes it into a reduce-scatter of
+    the grads, so optimizer state stays fully sharded.
+    """
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig(global_batch=shape.global_batch,
+                                   seq_len=shape.seq_len)
+        schedule = make_schedule(tcfg.schedule, tcfg.lr, tcfg.warmup_steps,
+                                 tcfg.total_steps, tcfg.stable_frac)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                if gather_shardings is not None:
+                    p = jax.lax.with_sharding_constraint(p, gather_shardings)
+                l, m = forward_train(cfg, p, batch, remat=remat)
+                return l
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            lr = schedule(opt_state["step"])
+            params, opt_state, _ = adamw_update(
+                params, grads, opt_state, lr,
+                beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+                weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+            return params, opt_state, loss
+        return train_step, (0, 1)
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder or cfg.num_patch_tokens:
+            def prefill_step(params, tokens, embeds):
+                return prefill(cfg, params, tokens, embeds=embeds,
+                               max_len=shape.seq_len, remat=remat)
+        else:
+            def prefill_step(params, tokens):
+                return prefill(cfg, params, tokens,
+                               max_len=shape.seq_len, remat=remat)
+        return prefill_step, ()
+
+    def serve_step(params, token, cache):
+        return decode_step(cfg, params, token, cache)
+    return serve_step, (2,)        # donate the cache
+
+
+def abstract_opt_state(params):
+    return jax.eval_shape(adamw_init, params)

@@ -1,0 +1,54 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \
+        --steps 200 --batch 8 --seq 128 --schedule wsd --ckpt /tmp/ckpt
+
+Full (non-reduced) configs are meant for the production mesh; on this CPU
+container use --reduced (the ≤2-layer family-preserving variant).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig, get_arch
+from repro.data import synthetic_batches
+from repro.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="wsd",
+                    choices=["wsd", "cosine", "constant"])
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--branching", type=int, default=4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--save-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+                       schedule=args.schedule, warmup_steps=args.warmup,
+                       total_steps=args.steps)
+    trainer = Trainer(cfg, tcfg, ckpt_dir=args.ckpt)
+    batches = synthetic_batches(cfg.vocab_size, args.batch, args.seq,
+                                branching=args.branching)
+    res = trainer.fit(batches, args.steps, log_every=args.log_every,
+                      save_every=args.save_every)
+    if args.ckpt:
+        trainer.save()
+    print(f"final ce={res['final_ce']:.4f} "
+          f"(optimal = ln({args.branching}) = "
+          f"{__import__('math').log(args.branching):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.models.model import (
+    init_params,
+    abstract_params,
+    init_cache,
+    abstract_cache,
+    forward_train,
+    loss_fn,
+    prefill,
+    decode_step,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "init_cache",
+    "abstract_cache",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+]

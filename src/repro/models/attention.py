@@ -1,0 +1,289 @@
+"""Attention math: GQA einsum reference, flash-style XLA attention (online
+softmax over KV blocks — the jnp mirror of the Pallas kernel), and decode
+attention over a KV cache.
+
+Shapes: q (B, Sq, H, hd); k,v (B, Skv, K, hd) with K = num_kv_heads,
+G = H // K query groups. Positions/segments are per-token int32 arrays;
+segment id -1 marks padding. Packed varlen chunked-prefill (the paper's
+C_chunk unit) is expressed through segment ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def build_mask(
+    q_pos: jnp.ndarray,            # (B, Sq)
+    kv_pos: jnp.ndarray,           # (B, Skv)
+    q_seg: Optional[jnp.ndarray] = None,
+    kv_seg: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Boolean (B, Sq, Skv) mask; True = attend."""
+    m = kv_pos[:, None, :] >= 0   # negative position = empty cache slot
+    m = jnp.broadcast_to(m, (q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]))
+    if causal:
+        m = m & (q_pos[:, :, None] >= kv_pos[:, None, :])
+    if window > 0:
+        m &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    if q_seg is not None and kv_seg is not None:
+        m &= q_seg[:, :, None] == kv_seg[:, None, :]
+        m &= kv_seg[:, None, :] >= 0
+    return m
+
+
+def gqa_reference(q, k, v, mask):
+    """Naive einsum GQA attention (oracle for flash paths and kernels)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce uniform weights; zero them out
+    any_valid = mask.any(axis=-1)[:, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def flash_attention_xla(
+    q, k, v,
+    q_pos, kv_pos,
+    q_seg=None, kv_seg=None,
+    causal: bool = True,
+    window: int = 0,
+    block: int = 512,
+    sorted_layout: bool = False,
+):
+    """Online-softmax attention scanning KV blocks: O(Sq·block) live memory.
+
+    Matches gqa_reference numerically (same masking semantics). This is what
+    XLA compiles for long-context prefill; the Pallas kernel in
+    repro.kernels.flash_prefill implements the same schedule with explicit
+    VMEM tiling for TPU.
+
+    sorted_layout=True asserts tokens are laid out in temporal order (true
+    for full prefill and packed varlen chunks, NOT for ring caches): with
+    causal masking the strictly-upper-triangular kv blocks are then skipped
+    entirely (§Perf iteration 4 — ~2× attention FLOPs on long prefill).
+    """
+    if sorted_layout and causal and q.shape[1] == k.shape[1]:
+        return _blockskip_vjp(window, block)(q, k, v, q_pos, kv_pos,
+                                             q_seg, kv_seg)
+    return _flash_scan(q, k, v, q_pos, kv_pos, q_seg, kv_seg, causal,
+                       window, block)
+
+
+@functools.lru_cache(maxsize=None)
+def _blockskip_vjp(window: int, block: int):
+    """Block-skip forward is a dynamic-bound fori_loop (not reverse-mode
+    differentiable); custom_vjp routes the backward through the full scan
+    path's VJP (identical math, no skipping in bwd). Positions/segments are
+    integer args with float0 cotangents."""
+    import numpy as np
+
+    @jax.custom_vjp
+    def f(q, k, v, q_pos, kv_pos, q_seg, kv_seg):
+        return _flash_causal_blockskip(q, k, v, q_pos, kv_pos, q_seg,
+                                       kv_seg, window, block)
+
+    def f_fwd(q, k, v, q_pos, kv_pos, q_seg, kv_seg):
+        out = f(q, k, v, q_pos, kv_pos, q_seg, kv_seg)
+        return out, (q, k, v, q_pos, kv_pos, q_seg, kv_seg)
+
+    def f_bwd(res, g):
+        q, k, v, q_pos, kv_pos, q_seg, kv_seg = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _flash_scan(q_, k_, v_, q_pos, kv_pos,
+                                           q_seg, kv_seg, True, window,
+                                           block), q, k, v)
+        dq, dk, dv = vjp(g)
+
+        def f0(x):
+            return (np.zeros(x.shape, jax.dtypes.float0)
+                    if x is not None else None)
+        return (dq, dk, dv, f0(q_pos), f0(kv_pos), f0(q_seg), f0(kv_seg))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def _flash_scan(q, k, v, q_pos, kv_pos, q_seg, kv_seg, causal, window,
+                block):
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    if Skv % block != 0:
+        pad = block - Skv % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        if kv_seg is not None:
+            kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-2)
+        Skv = k.shape[1]
+    nb = Skv // block
+
+    qg = q.reshape(B, Sq, K, G, hd)
+    ks = jnp.moveaxis(k.reshape(B, nb, block, K, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, block, K, v.shape[-1]), 1, 0)
+    kps = jnp.moveaxis(kv_pos.reshape(B, nb, block), 1, 0)
+    kss = (jnp.moveaxis(kv_seg.reshape(B, nb, block), 1, 0)
+           if kv_seg is not None else None)
+
+    hd_v = v.shape[-1]
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd_v), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if kss is not None:
+            kb, vb, kpb, ksb = xs
+        else:
+            kb, vb, kpb = xs
+            ksb = None
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kb).astype(jnp.float32) * scale
+        mask = build_mask(q_pos, kpb, q_seg, ksb, causal, window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    xs = (ks, vs, kps) if kss is None else (ks, vs, kps, kss)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+    out = jnp.moveaxis(out, (1, 2), (2, 3))  # (B,K,G,Sq,hd)->(B,Sq,K,G,hd)
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def _flash_causal_blockskip(q, k, v, q_pos, kv_pos, q_seg, kv_seg,
+                            window: int, block: int):
+    """Block-skipping flash attention for temporally-ordered layouts:
+    q block i only visits kv blocks 0..i (fori_loop with a dynamic bound) —
+    the strictly-upper triangle is never computed."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    hd_v = v.shape[-1]
+    scale = hd ** -0.5
+    pad = (-S) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-(2**30))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        if q_seg is not None:
+            q_seg = jnp.pad(q_seg, ((0, 0), (0, pad)), constant_values=-1)
+            kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-2)
+    Sp = S + pad
+    nb = Sp // block
+    qb = jnp.moveaxis(q.reshape(B, nb, block, K, G, hd), 1, 0)
+    qpb = jnp.moveaxis(q_pos.reshape(B, nb, block), 1, 0)
+    qsb = (jnp.moveaxis(q_seg.reshape(B, nb, block), 1, 0)
+           if q_seg is not None else None)
+
+    def q_block(carry, xs):
+        i = xs[0]
+        qi = xs[1]                                   # (B, block, K, G, hd)
+        qpi = xs[2]
+        qsi = xs[3] if qsb is not None else None
+        m0 = jnp.full((B, K, G, block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, block), jnp.float32)
+        a0 = jnp.zeros((B, K, G, block, hd_v), jnp.float32)
+
+        def kv_step(j, st):
+            m, l, acc = st
+            kb = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+            kpb = jax.lax.dynamic_slice_in_dim(kv_pos, j * block, block,
+                                               axis=1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi, kb
+                           ).astype(jnp.float32) * scale
+            mask = (kpb[:, None, :] <= qpi[:, :, None]) & \
+                (kpb[:, None, :] >= 0) & (qpi[:, :, None] >= 0)
+            if window > 0:
+                mask &= (qpi[:, :, None] - kpb[:, None, :]) < window
+            if qsb is not None:
+                ksb = jax.lax.dynamic_slice_in_dim(kv_seg, j * block, block,
+                                                   axis=1)
+                mask &= (qsi[:, :, None] == ksb[:, None, :]) & \
+                    (ksb[:, None, :] >= 0)
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(mask[:, None, None], jnp.exp(s - m_new[..., None]),
+                          0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return m_new, l, acc
+
+        m, l, acc = jax.lax.fori_loop(0, i + 1, kv_step, (m0, l0, a0))
+        out = jnp.where(l[..., None] > 0,
+                        acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+        return carry, out                              # (B,K,G,block,hd_v)
+
+    _, outs = jax.lax.scan(
+        q_block, None,
+        (jnp.arange(nb), qb, qpb) + ((qsb,) if qsb is not None else ()))
+    # outs: (nb, B, K, G, block, hd_v) -> (B, nb·block, K, G, hd_v)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, K, G, hd_v)
+    return out.reshape(B, Sp, H, hd_v)[:, :S].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_pos, pos, window: int = 0):
+    """Single-token decode attention.
+
+    q: (B, 1, H, hd); caches: (B, S, K, hd); kv_pos: (B, S) int32 (−1 = empty);
+    pos: (B,) int32 current positions. Memory-bound by design: one pass over
+    the cache (the repro.kernels.decode_attention Pallas kernel tiles this).
+    """
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window > 0:
+        valid &= (pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid.any(-1)[:, None, None, None], p, 0.0).astype(v_cache.dtype)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def mla_scores_decode(q_latent, q_rope, c_cache, kr_cache, kv_pos, pos):
+    """Absorbed-form MLA decode: q_latent (B,H,r) scores against the latent
+    cache directly (no per-head K materialization).
+
+    c_cache: (B, S, r); kr_cache: (B, S, dr); q_rope: (B, H, dr).
+    Returns weights (B, H, S) in f32 and the validity mask.
+    """
+    s = jnp.einsum("bhr,bsr->bhs", q_latent, c_cache).astype(jnp.float32)
+    s += jnp.einsum("bhd,bsd->bhs", q_rope, kr_cache).astype(jnp.float32)
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid.any(-1)[:, None, None], p, 0.0)
+    return p, valid

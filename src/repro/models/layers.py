@@ -1,0 +1,70 @@
+"""Primitive layers: norms, RoPE, initializers, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def init_stacked(key, n: int, d_in: int, d_out: int, dtype,
+                 scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (n, d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs. x: (..., S, n, head_dim); positions: (..., S) int32.
+
+    Position axis is -3 (token axis); head axis -2.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)              # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos_embedding(seq_len: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position embedding (S, D)."""
+    half = dim // 2
+    log_timescale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)

@@ -1,0 +1,276 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + O(1) decode.
+
+Follows the minimal SSD formulation of arXiv:2405.21060 §6: the sequence is
+split into chunks of Q tokens; within a chunk the output is a masked
+attention-like quadratic term (MXU-friendly), across chunks a linear
+recurrence carries the (heads, head_dim, d_state) state. Decode is a single
+state update per token — this is why SSM archs run the long_500k shape.
+
+The Pallas kernel in repro.kernels.ssd_scan implements the intra-chunk term
+with explicit VMEM tiling; this module is the pure-jnp path/oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SSMConfig
+from repro.models.layers import init_linear, rms_norm
+
+
+def ssm_dims(d_model: int, sc: SSMConfig):
+    d_inner = d_model * sc.expand
+    n_heads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.n_groups * sc.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba_params(key, d_model: int, sc: SSMConfig, dtype) -> Dict:
+    """Projections are SPLIT ([z|x] / [B|C] / dt) so every matrix shards
+    cleanly on its own output dim — a fused in_proj's split boundaries do
+    not align with model-axis shards and GSPMD replicates the whole SSD
+    block (§Perf iteration 3: jamba train was 16× over-computing)."""
+    di, nh, cdim = ssm_dims(d_model, sc)
+    gds2 = 2 * sc.n_groups * sc.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_zx": init_linear(ks[0], d_model, 2 * di, dtype),
+        "w_bc": init_linear(ks[1], d_model, gds2, dtype),
+        "w_dt": init_linear(ks[2], d_model, nh, dtype),
+        "conv_wx": (jax.random.normal(ks[3], (sc.d_conv, di), jnp.float32)
+                    / math.sqrt(sc.d_conv)).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_wbc": (jax.random.normal(ks[4], (sc.d_conv, gds2), jnp.float32)
+                     / math.sqrt(sc.d_conv)).astype(dtype),
+        "conv_bbc": jnp.zeros((gds2,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": init_linear(ks[5], di, d_model, dtype),
+    }
+
+
+def _project(x, params, di, nh):
+    zx = jnp.einsum("bsd,de->bse", x, params["w_zx"])
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = jnp.einsum("bsd,de->bse", x, params["w_bc"])
+    dt = jnp.einsum("bsd,de->bse", x, params["w_dt"])
+    return z, xs, bc, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d over the token axis. xBC: (B, S, C).
+    conv_state: (B, d_conv-1, C) previous-token tail or None (zeros)."""
+    dconv = conv_w.shape[0]
+    B = xBC.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, dconv - 1, xBC.shape[-1]), xBC.dtype)
+    full = jnp.concatenate([conv_state, xBC], axis=1)
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    S = xBC.shape[1]
+    for w in range(dconv):
+        out = out + full[:, w:w + S].astype(jnp.float32) * conv_w[w].astype(jnp.float32)
+    out = jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(xBC.dtype)
+    new_state = full[:, full.shape[1] - (dconv - 1):]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """SSD chunked scan.
+
+    x: (B, S, nh, hp); dt: (B, S, nh) (already softplus'd, f32);
+    A: (nh,) negative; Bm, Cm: (B, S, g, ds).
+    Returns y (B, S, nh, hp) and final state (B, nh, hp, ds).
+    """
+    Bsz, S, nh, hp = x.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // g                      # heads per group
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(Bsz, nc, chunk, *a.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(Bm), to_chunks(Cm))
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, nh, hp, ds), jnp.float32))
+
+    def body2(h, xs_c):
+        xc, dtc, Bc, Cc = xs_c
+        xc32 = xc.astype(jnp.float32)
+        Bc32 = Bc.astype(jnp.float32)
+        Cc32 = Cc.astype(jnp.float32)
+        dA = dtc * A                               # (B,Q,nh)
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # heads grouped: head index h = (g, i) with i in [0, hpg)
+        hg = h.reshape(Bsz, g, hpg, hp, ds)        # carry-in state
+        # off-diagonal: y_off[b,q,g,i,p] = decay_in * Σ_n C[b,q,g,n]·h[b,g,i,p,n]
+        y_off = jnp.einsum("bqgn,bgipn->bqgip", Cc32, hg)
+        y_off = y_off * jnp.exp(dA_cum).reshape(Bsz, chunk, g, hpg)[..., None]
+        # intra-chunk: L[b,q,k,h] = exp(dA_cum[q]-dA_cum[k]) for q>=k.
+        # mask BEFORE exp: masked rel is positive and can overflow, and
+        # inf·0 in the backward poisons grads with NaNs.
+        rel = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # (B,Q,Q,nh)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.exp(jnp.where(causal[None, :, :, None], rel, -1e30))
+        CB = jnp.einsum("bqgn,bkgn->bqkg", Cc32, Bc32)        # (B,Q,Q,g)
+        Lg = L.reshape(Bsz, chunk, chunk, g, hpg)
+        att = CB[..., None] * Lg * dtc.reshape(Bsz, 1, chunk, g, hpg)
+        xg = xc32.reshape(Bsz, chunk, g, hpg, hp)
+        y_diag = jnp.einsum("bqkgi,bkgip->bqgip", att, xg)
+        # chunk state contribution: S[b,g,i,p,n] = Σ_k decay_out·dt·B·x
+        decay_out = jnp.exp(dA_cum[:, -1:, :] - dA_cum)        # (B,Q,nh)
+        w = (decay_out * dtc).reshape(Bsz, chunk, g, hpg)
+        states = jnp.einsum("bkgi,bkgn,bkgip->bgipn", w, Bc32, xg)
+        chunk_decay = jnp.exp(dA_cum[:, -1, :]).reshape(Bsz, g, hpg)
+        h_new = hg * chunk_decay[..., None, None] + states
+        y = (y_diag + y_off).reshape(Bsz, chunk, nh, hp)
+        return h_new.reshape(Bsz, nh, hp, ds), y
+
+    h_final, ys = jax.lax.scan(body2, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Sp, nh, hp)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(x, params, sc: SSMConfig, initial_state=None, conv_state=None):
+    """Full-sequence forward. x: (B, S, D).
+
+    Returns (out (B,S,D), (ssm_state, conv_state)) for chunked continuation.
+    """
+    d_model = x.shape[-1]
+    di, nh, cdim = ssm_dims(d_model, sc)
+    gds = sc.n_groups * sc.d_state
+    z, xr, bc, dt = _project(x, params, di, nh)
+    cs_x, cs_bc = (conv_state if conv_state is not None else (None, None))
+    xr, ncs_x = _causal_conv(xr, params["conv_wx"], params["conv_bx"], cs_x)
+    bc, ncs_bc = _causal_conv(bc, params["conv_wbc"], params["conv_bbc"],
+                              cs_bc)
+    new_conv_state = (ncs_x, ncs_bc)
+    xs = xr.reshape(*xr.shape[:2], nh, sc.head_dim)
+    Bm = bc[..., :gds].reshape(*bc.shape[:2], sc.n_groups, sc.d_state)
+    Cm = bc[..., gds:].reshape(*bc.shape[:2], sc.n_groups, sc.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h = ssd_chunked(xs, dt, A, Bm, Cm, sc.chunk_size, initial_state)
+    y = y + xs.astype(jnp.float32) * params["D_skip"][:, None]
+    y = y.reshape(*y.shape[:2], di)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, (h, new_conv_state)
+
+
+def mamba_decode_step(x, params, sc: SSMConfig, ssm_state, conv_state):
+    """Single-token decode. x: (B, 1, D); ssm_state: (B, nh, hp, ds) f32;
+    conv_state: (B, d_conv-1, conv_dim). O(1) in context length."""
+    d_model = x.shape[-1]
+    di, nh, cdim = ssm_dims(d_model, sc)
+    gds = sc.n_groups * sc.d_state
+    g, ds, hp = sc.n_groups, sc.d_state, sc.head_dim
+    hpg = nh // g
+    z, xr, bc, dt = _project(x, params, di, nh)
+    cs_x, cs_bc = conv_state
+    xr, ncs_x = _causal_conv(xr, params["conv_wx"], params["conv_bx"], cs_x)
+    bc, ncs_bc = _causal_conv(bc, params["conv_wbc"], params["conv_bbc"],
+                              cs_bc)
+    new_conv_state = (ncs_x, ncs_bc)
+    xt = xr[:, 0].reshape(-1, nh, hp).astype(jnp.float32)
+    Bt = bc[:, 0, :gds].reshape(-1, g, ds).astype(jnp.float32)
+    Ct = bc[:, 0, gds:].reshape(-1, g, ds).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                   # (B,nh)
+    xg = xt.reshape(-1, g, hpg, hp)
+    dtg = dt.reshape(-1, g, hpg)
+    upd = jnp.einsum("bgi,bgn,bgip->bgipn", dtg, Bt, xg)
+    hg = ssm_state.reshape(-1, g, hpg, hp, ds)
+    hg = hg * dA.reshape(-1, g, hpg)[..., None, None] + upd
+    y = jnp.einsum("bgn,bgipn->bgip", Ct, hg).reshape(-1, nh, hp)
+    y = y + xt * params["D_skip"][:, None]
+    y = y.reshape(-1, 1, di)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, (hg.reshape(-1, nh, hp, ds), new_conv_state)
+
+
+def ssd_chunked_kernel(x, dt, A, Bm, Cm, chunk: int, initial_state=None,
+                       interpret=None):
+    """ssd_chunked with the intra-chunk work done by the Pallas kernel
+    (repro.kernels.ssd_scan); only the tiny inter-chunk recurrence stays in
+    a jax.lax.scan. Numerically equivalent to ssd_chunked (tested)."""
+    from repro.kernels.ssd_scan.ops import ssd_chunk_kernel_apply
+    Bsz, S, nh, hp = x.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    assert g == 1, "kernel path supports n_groups=1"
+    hpg = nh // g
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(Bsz, nc, chunk, nh, hp)
+    dtc = dt.reshape(Bsz, nc, chunk, nh)
+    Bc = Bm.reshape(Bsz, nc, chunk, ds)
+    Cc = Cm.reshape(Bsz, nc, chunk, ds)
+    y_diag, states = ssd_chunk_kernel_apply(xc, dtc, A, Bc, Cc,
+                                            interpret=interpret)
+    # inter-chunk recurrence + carry-in output term (XLA)
+    dA_cum = jnp.cumsum(dtc * A, axis=2)               # (B,nc,Q,nh)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])         # (B,nc,nh)
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, nh, hp, ds), jnp.float32))
+
+    def body(h, xs_c):
+        Cm_c, decay_c, dAc_c, st_c = xs_c
+        y_off = jnp.einsum("bqn,bhpn->bqhp", Cm_c.astype(jnp.float32), h)
+        y_off = y_off * jnp.exp(dAc_c)[..., None].transpose(0, 1, 2, 3)
+        h_new = h * decay_c[:, :, None, None] + st_c.transpose(0, 1, 3, 2)
+        return h_new, y_off
+
+    xs = (jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+          jnp.moveaxis(dA_cum, 1, 0), jnp.moveaxis(states, 1, 0))
+    h_final, y_offs = jax.lax.scan(body, h0, xs)
+    y_off = jnp.moveaxis(y_offs, 0, 1).reshape(Bsz, Sp, nh, hp)
+    y = (y_diag.reshape(Bsz, Sp, nh, hp) + y_off)[:, :S]
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, initial_state=None):
+    """O(S²) or sequential-scan oracle for ssd_chunked (tests only).
+
+    Direct recurrence: h_t = h_{t-1}·exp(dt_t A) + dt_t · B_t ⊗ x_t;
+    y_t = C_t · h_t.
+    """
+    Bsz, S, nh, hp = x.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // g
+    h = (initial_state if initial_state is not None
+         else jnp.zeros((Bsz, nh, hp, ds), jnp.float32)).reshape(Bsz, g, hpg, hp, ds)
+
+    def step(h, t):
+        xt = x[:, t].astype(jnp.float32).reshape(Bsz, g, hpg, hp)
+        Bt = Bm[:, t].astype(jnp.float32)
+        Ct = Cm[:, t].astype(jnp.float32)
+        dtt = dt[:, t].reshape(Bsz, g, hpg)
+        dA = jnp.exp(dtt * A.reshape(g, hpg))
+        upd = jnp.einsum("bgi,bgn,bgip->bgipn", dtt, Bt, xt)
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bgn,bgipn->bgip", Ct, h)
+        return h, y.reshape(Bsz, nh, hp)
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h.reshape(Bsz, nh, hp, ds)

@@ -1,0 +1,523 @@
+"""Model assembly: scan-over-layers transformer covering all six assigned
+architecture families (dense / MoE / SSM / hybrid / VLM / audio enc-dec).
+
+Layer stacking: `dense_prefix` layers are scanned as one stack; the remaining
+layers are grouped into `reps` repetitions of `cfg.layer_pattern`, scanned
+over reps with the pattern slots applied sequentially inside the body. This
+keeps the HLO O(1) in depth (DeepSeek-V3's 61 layers compile as 2 scans).
+
+Public API (all pure, cfg static):
+    init_params / abstract_params
+    init_cache  / abstract_cache
+    prefill(cfg, params, tokens, ...)  -> (logits_last, cache)
+    decode_step(cfg, params, token, cache) -> (logits, cache)
+    forward_train / loss_fn
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionKind, LayerKind, ModelConfig
+from repro.models.blocks import (
+    block_decode, block_full, init_block_params,
+)
+from repro.models.layers import rms_norm, sinusoid_pos_embedding
+from repro.models.mamba import ssm_dims
+
+
+def _ckpt(fn, remat):
+    """remat: False/"none" (no remat), True/"block" (full recompute),
+    "dots" (save matmul outputs — recompute only the cheap elementwise
+    chains; §Perf iteration 5)."""
+    if not remat or remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+def layer_layout(cfg: ModelConfig) -> Tuple[int, Tuple[LayerKind, ...], int]:
+    """(prefix_count, pattern, reps). Validates divisibility."""
+    P = cfg.dense_prefix
+    pattern = cfg.layer_pattern
+    rest = cfg.num_layers - P
+    if rest % len(pattern) != 0:
+        raise ValueError(
+            f"{cfg.name}: {rest} non-prefix layers not divisible by "
+            f"pattern of length {len(pattern)}")
+    return P, pattern, rest // len(pattern)
+
+
+def _has_attn_cache(cfg: ModelConfig) -> bool:
+    return any(k in (LayerKind.DENSE, LayerKind.MOE) for k in cfg.layer_kinds())
+
+
+def kv_buffer_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.attention == AttentionKind.SWA and cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _stacked_blocks(key, n: int, cfg: ModelConfig, kind: LayerKind, dtype,
+                    cross: bool = False):
+    keys = jax.random.split(key, n)
+    return jax.vmap(
+        lambda k: init_block_params(k, cfg, kind, dtype, cross=cross)
+    )(keys)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    P, pattern, reps = layer_layout(cfg)
+    ks = iter(jax.random.split(key, 16))
+    D, V = cfg.d_model, cfg.vocab_size
+    params: Dict = {
+        "embed": (jax.random.normal(next(ks), (V, D), jnp.float32)
+                  * 0.02).astype(dtype),
+        "ln_f": jnp.ones((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(next(ks), (D, V), jnp.float32)
+                             / math.sqrt(D)).astype(dtype)
+    cross = cfg.is_encoder_decoder
+    if P:
+        params["prefix"] = _stacked_blocks(next(ks), P, cfg, LayerKind.DENSE,
+                                           dtype, cross=cross)
+    blocks = {}
+    for j, kind in enumerate(pattern):
+        blocks[f"p{j}"] = _stacked_blocks(next(ks), reps, cfg, kind, dtype,
+                                          cross=cross)
+    params["blocks"] = blocks
+    if cfg.is_encoder_decoder:
+        params["encoder"] = _stacked_blocks(
+            next(ks), cfg.num_encoder_layers, cfg, LayerKind.DENSE, dtype)
+        params["enc_ln_f"] = jnp.ones((D,), dtype)
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "ln_h": jnp.ones((D,), dtype),
+            "ln_e": jnp.ones((D,), dtype),
+            "proj": (jax.random.normal(next(ks), (2 * D, D), jnp.float32)
+                     / math.sqrt(2 * D)).astype(dtype),
+            "block": init_block_params(next(ks), cfg, pattern[0], dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_params, cfg, dtype=dtype), key)
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _entry_struct(cfg: ModelConfig, kind: LayerKind, B: int, S_buf: int,
+                  dtype, enc_len: int = 0):
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    if kind in (LayerKind.DENSE, LayerKind.MOE):
+        if cfg.attention == AttentionKind.MLA:
+            m = cfg.mla
+            kv = (jnp.zeros((B, S_buf, m.kv_lora_rank), dtype),
+                  jnp.zeros((B, S_buf, m.qk_rope_head_dim), dtype))
+        else:
+            kv = (jnp.zeros((B, S_buf, K, hd), dtype),
+                  jnp.zeros((B, S_buf, K, hd), dtype))
+        if cfg.is_encoder_decoder:
+            enc_kv = (jnp.zeros((B, enc_len, K, hd), dtype),
+                      jnp.zeros((B, enc_len, K, hd), dtype))
+            return (kv, enc_kv)
+        return kv
+    di, nh, cdim = ssm_dims(cfg.d_model, cfg.ssm)
+    gds2 = 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    entry = (jnp.zeros((B, nh, cfg.ssm.head_dim, cfg.ssm.d_state), jnp.float32),
+             (jnp.zeros((B, cfg.ssm.d_conv - 1, di), dtype),
+              jnp.zeros((B, cfg.ssm.d_conv - 1, gds2), dtype)))
+    if cfg.is_encoder_decoder:
+        enc_kv = (jnp.zeros((B, enc_len, K, hd), dtype),
+                  jnp.zeros((B, enc_len, K, hd), dtype))
+        return (entry, enc_kv)
+    return entry
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Dict:
+    P, pattern, reps = layer_layout(cfg)
+    S_buf = kv_buffer_len(cfg, max_len) if _has_attn_cache(cfg) else 1
+    enc_len = cfg.encoder_seq_len if cfg.is_encoder_decoder else 0
+
+    def stack(n, kind):
+        e = _entry_struct(cfg, kind, batch, S_buf, dtype, enc_len)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), e)
+
+    cache: Dict = {
+        "cur": jnp.zeros((batch,), jnp.int32),
+        "kv_pos": jnp.full((batch, S_buf), -1, jnp.int32),
+    }
+    if P:
+        cache["prefix"] = stack(P, LayerKind.DENSE)
+    cache["blocks"] = {f"p{j}": stack(reps, kind)
+                       for j, kind in enumerate(pattern)}
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _run_encoder(cfg: ModelConfig, params, frames: jnp.ndarray,
+                 remat: bool = False):
+    B, F, D = frames.shape
+    x = frames + sinusoid_pos_embedding(F, D)[None].astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+
+    def body(x, p):
+        fn = functools.partial(block_full, kind=LayerKind.DENSE, cfg=cfg,
+                               positions=pos, causal=False, use_rope=False)
+        y, _, _ = _ckpt(lambda pp, xx: fn(pp, xx), remat)(p, x)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward_full(cfg: ModelConfig, params, tokens, positions=None, seg=None,
+                 embeds=None, want_cache: bool = False, remat: bool = False):
+    """Returns (hidden (B,St,D), caches, aux, enc_out).
+
+    tokens: (B, S) int32. embeds: modality-frontend embeddings —
+    VLM: prepended patch embeddings; audio: encoder frames.
+    """
+    B, S = tokens.shape
+    D = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert embeds is not None, "enc-dec needs frame embeddings"
+        enc_out = _run_encoder(cfg, params, embeds.astype(x.dtype), remat)
+    elif cfg.num_patch_tokens and embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    St = x.shape[1]
+    # §Perf iteration (seq-parallel fallback): when attention heads do not
+    # divide the model axis, the launcher maps "attn_seq" -> model axis and
+    # the whole layer stack runs sequence-sharded instead of replicated
+    # (no-op without an active mesh or when St doesn't divide).
+    from repro.distributed.annotate import constrain as _constrain
+    x = _constrain(x, "tokens", "attn_seq", None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32), (B, St))
+    if seg is not None and St != S:
+        # patch prefix belongs to segment of first text token
+        pad_seg = jnp.broadcast_to(seg[:, :1], (B, St - S))
+        seg = jnp.concatenate([pad_seg, seg], axis=1)
+
+    P, pattern, reps = layer_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict = {}
+
+    def make_body(kinds):
+        def body(carry, p_slice):
+            x, aux = carry
+            entries = []
+            for j, kind in enumerate(kinds):
+                pj = p_slice[f"s{j}"]
+                fn = functools.partial(
+                    block_full, kind=kind, cfg=cfg, positions=positions,
+                    seg=seg, causal=True, use_rope=True, enc_out=enc_out)
+                x, entry, a = _ckpt(lambda pp, xx: fn(pp, xx), remat)(pj, x)
+                entries.append(entry)
+                aux = aux + a
+            return (x, aux), tuple(entries)
+        return body
+
+    if P:
+        body = make_body([LayerKind.DENSE])
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), {"s0": params["prefix"]})
+        caches["prefix"] = ys[0]
+    body = make_body(list(pattern))
+    p_stack = {f"s{j}": params["blocks"][f"p{j}"] for j in range(len(pattern))}
+    (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), p_stack)
+    caches["blocks"] = {f"p{j}": ys[j] for j in range(len(pattern))}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, (caches if want_cache else None), aux_total, enc_out
+
+
+def logits_from_hidden(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"])
+    return jnp.einsum("...d,dv->...v", x, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, params, batch, remat: bool = False):
+    """batch: dict(tokens (B,S), targets (B,S; -100 = ignore),
+    [embeds (B,P,D) or frames], [seg], [positions]). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    x, _, aux, _ = forward_full(
+        cfg, params, tokens,
+        positions=batch.get("positions"), seg=batch.get("seg"),
+        embeds=batch.get("embeds"), want_cache=False, remat=remat)
+    if cfg.num_patch_tokens and batch.get("embeds") is not None:
+        x_text = x[:, x.shape[1] - tokens.shape[1]:]
+    else:
+        x_text = x
+    logits = logits_from_hidden(cfg, params, x_text)
+    loss, n_tok = _ce_loss(logits, targets)
+    metrics = {"ce": loss, "aux": aux, "tokens": n_tok}
+    total = loss + cfg.moe.router_aux_weight * aux
+
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        mtp = params["mtp"]
+        h = rms_norm(x_text[:, :-1], mtp["ln_h"], cfg.norm_eps)
+        e = rms_norm(jnp.take(params["embed"], tokens[:, 1:], axis=0),
+                     mtp["ln_e"], cfg.norm_eps)
+        hm = jnp.einsum("bsd,de->bse", jnp.concatenate([h, e], -1),
+                        mtp["proj"])
+        B, Sm, _ = hm.shape
+        pos = jnp.broadcast_to(jnp.arange(Sm, dtype=jnp.int32), (B, Sm))
+        hm, _, mtp_aux, _ = _single_block(cfg, mtp["block"], hm, pos)
+        mtp_logits = logits_from_hidden(cfg, params,
+                                        rms_norm(hm, params["ln_f"],
+                                                 cfg.norm_eps))
+        # position t predicts token t+2 => targets shifted once more
+        mtp_loss, _ = _ce_loss(mtp_logits[:, :-1], targets[:, 2:])
+        metrics["mtp_ce"] = mtp_loss
+        total = total + 0.3 * mtp_loss + cfg.moe.router_aux_weight * mtp_aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _single_block(cfg, p, x, pos):
+    kind = cfg.layer_pattern[0]
+    y, entry, aux = block_full(p, x, kind, cfg, pos)
+    return y, entry, aux, None
+
+
+def _ce_loss(logits, targets):
+    mask = targets >= 0
+    tgt = jnp.where(mask, targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(mask.sum(), 1)
+    return -(ll * mask).sum() / n, n
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = False):
+    loss, _ = forward_train(cfg, params, batch, remat)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, embeds=None, lengths=None,
+            max_len: Optional[int] = None, seg=None, positions=None,
+            cache_dtype=None, remat: bool = False):
+    """Run the full prompt, build the decode cache, return last-token logits.
+
+    tokens (B, S); lengths (B,) true per-row lengths (defaults to S).
+    Returns (logits (B, V), cache).
+    """
+    B, S = tokens.shape
+    max_len = max_len or cfg.max_seq_len
+    cache_dtype = cache_dtype or params["embed"].dtype
+    x, caches, aux, enc_out = forward_full(
+        cfg, params, tokens, positions=positions, seg=seg, embeds=embeds,
+        want_cache=True, remat=remat)
+    St = x.shape[1]
+    n_prefix = St - S  # patch tokens (VLM)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    full_lengths = lengths + n_prefix
+
+    # last valid hidden state per row
+    idx = jnp.clip(full_lengths - 1, 0, St - 1)
+    last_h = x[jnp.arange(B), idx]
+    logits = logits_from_hidden(cfg, params, last_h)
+
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    S_buf = cache["kv_pos"].shape[1]
+    pos_grid = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32), (B, St))
+    valid = pos_grid < full_lengths[:, None]
+
+    if _has_attn_cache(cfg):
+        if S_buf >= St:
+            kv_pos = jnp.where(valid, pos_grid, -1)
+            cache["kv_pos"] = cache["kv_pos"].at[:, :St].set(kv_pos)
+        else:
+            # SWA ring: slot i holds, per row, the newest VALID position p
+            # with p % W == i (rows shorter than St must not see garbage).
+            W = S_buf
+            last = full_lengths - 1                                 # (B,)
+            tail = last[:, None] - ((last[:, None] - jnp.arange(W)) % W)
+            cache["kv_pos"] = jnp.where(tail >= 0, tail, -1)        # (B, W)
+
+        def place(buf, new):
+            """buf (n,B,S_buf,...), new (n,B,St,...) -> write/ring-gather."""
+            if S_buf >= St:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, new.astype(buf.dtype), 0, axis=2)
+            W = S_buf
+            last = full_lengths - 1
+            tail = last[:, None] - ((last[:, None] - jnp.arange(W)) % W)
+            idx = jnp.clip(tail, 0, St - 1)                         # (B, W)
+            idx = idx.reshape((1, B, W) + (1,) * (new.ndim - 3))
+            return jnp.take_along_axis(new, idx, axis=2).astype(buf.dtype)
+    def merge_entry(kind, buf_entry, new_entry):
+        if cfg.is_encoder_decoder:
+            buf_core, _ = buf_entry
+            new_core, enc_kv = new_entry
+            return (_merge_core(kind, buf_core, new_core), enc_kv)
+        return _merge_core(kind, buf_entry, new_entry)
+
+    def _merge_core(kind, buf_core, new_core):
+        if kind in (LayerKind.DENSE, LayerKind.MOE):
+            bk, bv = buf_core
+            nk, nv = new_core
+            return (place(bk, nk), place(bv, nv))
+        bs, bc = buf_core
+        ns, ncv = new_core
+        return (ns.astype(bs.dtype),
+                jax.tree.map(lambda n, b: n.astype(b.dtype), ncv, bc))
+
+    P, pattern, reps = layer_layout(cfg)
+    if P:
+        cache["prefix"] = merge_entry(LayerKind.DENSE, cache["prefix"],
+                                      caches["prefix"])
+    for j, kind in enumerate(pattern):
+        cache["blocks"][f"p{j}"] = merge_entry(
+            kind, cache["blocks"][f"p{j}"], caches["blocks"][f"p{j}"])
+    cache["cur"] = full_lengths
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (the paper's C_chunk execution unit)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(cfg: ModelConfig, params, tokens, cache):
+    """Extend the cache by one chunk of prompt tokens (B, Sc) — true chunked
+    prefill with KV continuation. Returns (logits of last chunk token, cache).
+
+    Whisper note: the encoder must have been run by a prior `prefill` call
+    (cross K/V live in the cache); chunks extend only the decoder side.
+    """
+    from repro.models.blocks import block_extend
+    B, Sc = tokens.shape
+    pos0 = cache["cur"]                                     # (B,)
+    positions = pos0[:, None] + jnp.arange(Sc, dtype=jnp.int32)[None]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    kv_pos = cache["kv_pos"]
+    P, pattern, reps = layer_layout(cfg)
+    new_cache: Dict = dict(cache)
+
+    def make_body(kinds, keys):
+        def body(carry, xs):
+            x, kv_pos = carry
+            p_slice, c_slice = xs
+            new_entries = {}
+            for j, kind in enumerate(kinds):
+                x, entry, kv_pos = block_extend(
+                    p_slice[keys[j]], x, kind, cfg, c_slice[keys[j]],
+                    kv_pos, positions)
+                new_entries[keys[j]] = entry
+            return (x, kv_pos), new_entries
+        return body
+
+    if P:
+        body = make_body([LayerKind.DENSE], ["s0"])
+        (x, kv_pos), ys = jax.lax.scan(
+            body, (x, kv_pos),
+            ({"s0": params["prefix"]}, {"s0": cache["prefix"]}))
+        new_cache["prefix"] = ys["s0"]
+    keys = [f"s{j}" for j in range(len(pattern))]
+    body = make_body(list(pattern), keys)
+    p_stack = {f"s{j}": params["blocks"][f"p{j}"] for j in range(len(pattern))}
+    c_stack = {f"s{j}": cache["blocks"][f"p{j}"] for j in range(len(pattern))}
+    (x, kv_pos), ys = jax.lax.scan(body, (x, kv_pos), (p_stack, c_stack))
+    new_cache["blocks"] = {f"p{j}": ys[f"s{j}"] for j in range(len(pattern))}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1])
+    new_cache["kv_pos"] = kv_pos
+    new_cache["cur"] = pos0 + Sc
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, token, cache):
+    """One decode step. token (B, 1) int32; returns (logits (B,V), cache)."""
+    B = token.shape[0]
+    pos = cache["cur"]                                  # (B,)
+    x = jnp.take(params["embed"], token, axis=0)        # (B,1,D)
+    kv_pos = cache["kv_pos"]
+    P, pattern, reps = layer_layout(cfg)
+    new_cache: Dict = dict(cache)
+
+    def make_body(kinds, keys):
+        def body(carry, xs):
+            x, kv_pos = carry
+            p_slice, c_slice = xs
+            new_entries = {}
+            for j, kind in enumerate(kinds):
+                x, entry, kv_pos2 = block_decode(
+                    p_slice[keys[j]], x, kind, cfg, c_slice[keys[j]],
+                    kv_pos, pos)
+                new_entries[keys[j]] = entry
+                if kv_pos2 is not None:
+                    kv_pos = kv_pos2
+            return (x, kv_pos), new_entries
+        return body
+
+    if P:
+        body = make_body([LayerKind.DENSE], ["s0"])
+        (x, kv_pos), ys = jax.lax.scan(
+            body, (x, kv_pos),
+            ({"s0": params["prefix"]}, {"s0": cache["prefix"]}))
+        new_cache["prefix"] = ys["s0"]
+    keys = [f"s{j}" for j in range(len(pattern))]
+    body = make_body(list(pattern), keys)
+    p_stack = {f"s{j}": params["blocks"][f"p{j}"] for j in range(len(pattern))}
+    c_stack = {f"s{j}": cache["blocks"][f"p{j}"] for j in range(len(pattern))}
+    (x, kv_pos), ys = jax.lax.scan(body, (x, kv_pos), (p_stack, c_stack))
+    new_cache["blocks"] = {f"p{j}": ys[f"s{j}"] for j in range(len(pattern))}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, 0])
+    new_cache["kv_pos"] = kv_pos
+    new_cache["cur"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,153 @@
+"""End-to-end P/D-disaggregated cluster simulation (the paper's 3P1D
+deployment): requests flow prefill pool → KV-cache transfer (ICI/DCN) →
+decode pool, with SBS or immediate scheduling on BOTH phases.
+
+Metrics: TTFT (arrival → first token, includes the transfer), TPOT, E2E
+latency, and goodput (requests completing within an SLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+from repro.config.base import ModelConfig, ServingConfig
+from repro.core.scheduler import (
+    DecodeScheduler, ImmediatePrefillScheduler, StaggeredBatchScheduler,
+)
+from repro.core.types import Request, RequestPhase
+from repro.serving.cluster import _EventLoop, build_state
+from repro.serving.costmodel import CostModel, ICI_BW
+from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+from repro.serving.metrics import mean, percentile
+
+
+@dataclasses.dataclass
+class E2EReport:
+    n_finished: int
+    ttft_mean: float
+    ttft_p99: float
+    tpot_mean: float
+    e2e_mean: float
+    goodput: float                  # fraction finishing within slo_e2e
+    prefill_util: float
+
+    def row(self) -> str:
+        return (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
+                f"p99={self.ttft_p99*1000:.0f}ms "
+                f"tpot={self.tpot_mean*1000:.1f}ms "
+                f"e2e={self.e2e_mean:.2f}s goodput={self.goodput*100:.1f}% "
+                f"util={self.prefill_util*100:.1f}%")
+
+
+class PDClusterSim:
+    """3P1D-style pipeline with KV transfer between the pools."""
+
+    def __init__(self, model_cfg: ModelConfig, scfg: ServingConfig,
+                 scheduler: str = "sbs", cost: Optional[CostModel] = None,
+                 transfer_bw: float = ICI_BW):
+        self.cfg = model_cfg
+        self.scfg = scfg
+        self.cost = cost or CostModel(model_cfg)
+        self.state = build_state(scfg)
+        self.transfer_bw = transfer_bw
+        if scheduler == "sbs":
+            self.psched = StaggeredBatchScheduler(self.state,
+                                                  n_limit=scfg.n_limit)
+            self.dsched = DecodeScheduler(self.state, mode="sbs",
+                                          iqr_k=scfg.iqr_k)
+        else:
+            self.psched = ImmediatePrefillScheduler(self.state)
+            self.dsched = DecodeScheduler(self.state, mode="immediate",
+                                          policy="round_robin")
+        self.prefill = [
+            SimPrefillInstance(
+                i, [d.dp_id for d in self.state.prefill_dps_of(i)],
+                scfg.chunk_size, self.cost)
+            for i in range(scfg.num_prefill_instances)]
+        self.decode = [
+            SimDecodeInstance(
+                i, [d.dp_id for d in self.state.decode_dps_of(i)], self.cost)
+            for i in range(scfg.num_decode_instances)]
+        self._dp2dinst = {d.dp_id: d.instance_id
+                          for d in self.state.decode_dps}
+        self._pass_start: Dict[int, float] = {}
+
+    def _transfer_time(self, req: Request) -> float:
+        bytes_ = self.cost.kv_bytes_per_token * req.input_len
+        return bytes_ / self.transfer_bw + 0.002
+
+    def run(self, requests: Sequence[Request], duration: float,
+            slo_e2e: float = 20.0) -> E2EReport:
+        ev = _EventLoop()
+        for r in requests:
+            ev.push(r.arrival_time, "arrival", r)
+        now = 0.0
+        horizon = duration * 30 + 120.0
+        while ev:
+            now, _, kind, payload = ev.pop()
+            if now > horizon:
+                break
+            if kind == "arrival":
+                self.psched.on_arrival(payload, now)
+            elif kind == "pass_end":
+                inst: SimPrefillInstance = payload
+                start = self._pass_start.pop(inst.instance_id)
+                res = inst.finish_pass(now)
+                for e in res.end_forwards:
+                    e.exec_time = now - start
+                    self.psched.on_end_forward(e)
+                for req in res.completed:
+                    # prefill done: ship the KV cache to the decode pool
+                    ev.push(now + self._transfer_time(req), "kv_arrived", req)
+            elif kind == "kv_arrived":
+                req: Request = payload
+                req.first_token_time = None       # TTFT set by decode
+                req.phase = RequestPhase.DECODING
+                place = self.dsched.on_handoff(req, now)
+                self._place(place)
+            elif kind == "decode_end":
+                dinst: SimDecodeInstance = payload
+                dinst.finish_step(now, self.state.decode_dps)
+            # drive both schedulers + engines
+            for cmd in self.psched.poll(now):
+                self.prefill[cmd.instance_id].enqueue(cmd, now)
+            self._place(self.dsched.poll(now))
+            for inst in self.prefill:
+                dur = inst.start_pass(now)
+                if dur is not None:
+                    self._pass_start[inst.instance_id] = now
+                    ev.push(now + dur, "pass_end", inst)
+            for dinst in self.decode:
+                dur = dinst.start_step(self.state.decode_dps)
+                if dur is not None:
+                    ev.push(now + dur, "decode_end", dinst)
+            nxt = self.psched.next_event_time(now)
+            if nxt is not None and nxt > now:
+                ev.push(nxt, "tick", None)
+            nd = self.dsched.next_event_time(now)
+            if nd is not None and nd > now:
+                ev.push(nd, "tick", None)
+
+        done = [r for r in requests if r.finish_time is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [(r.finish_time - r.first_token_time) / max(r.generated - 1, 1)
+                 for r in done if r.first_token_time is not None]
+        e2e = [r.finish_time - r.arrival_time for r in done]
+        util = (sum(i.tokens_processed for i in self.prefill)
+                / max(sum(i.capacity_offered for i in self.prefill), 1))
+        good = sum(1 for x in e2e if x <= slo_e2e) / max(len(requests), 1)
+        return E2EReport(
+            n_finished=len(done),
+            ttft_mean=mean(ttfts), ttft_p99=percentile(ttfts, 99),
+            tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
+            prefill_util=util)
+
+    def _place(self, placements):
+        if not placements:
+            return
+        for dp_id, reqs in placements.items():
+            inst = self.decode[self._dp2dinst[dp_id]]
+            for r in reqs:
+                inst.admit(dp_id, r)

@@ -1,0 +1,184 @@
+"""Simulated inference engines (the Resource Plane of Figure 5).
+
+A prefill instance is a NON-PREEMPTIVE DISCRETE BATCH PROCESSOR (§3.2):
+once a pass starts the engine is locked; arriving work accumulates in the
+per-DP device-side queue. The pass duration is the cost-model time of the
+most-loaded DP unit (the DP+EP sync barrier of §3.3) — so imbalance shows up
+as parallelization bubbles exactly as in Figure 3.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.types import DispatchCommand, EndForward, Request
+from repro.serving.costmodel import CostModel
+
+
+@dataclasses.dataclass
+class PassResult:
+    end_forwards: List[EndForward]
+    completed: List[Request]      # prefill fully done at pass end
+    processed_per_dp: Dict[int, int]
+
+
+class SimPrefillInstance:
+    def __init__(self, instance_id: int, dp_ids: Sequence[int],
+                 chunk: int, cost: CostModel):
+        self.instance_id = instance_id
+        self.dp_ids = list(dp_ids)
+        self.chunk = chunk
+        self.cost = cost
+        self.queues: Dict[int, Deque[Tuple[Request, int]]] = {
+            d: collections.deque() for d in dp_ids}
+        self.busy = False
+        self._current: Optional[Dict[int, List[Tuple[Request, int]]]] = None
+        # stats
+        self.passes = 0
+        self.tokens_processed = 0
+        self.capacity_offered = 0     # passes * n_dp * chunk
+
+    # ------------------------------------------------------------------
+    def enqueue(self, cmd: DispatchCommand, now: float) -> None:
+        for dp_id, lst in cmd.assignments.items():
+            for req, tok in lst:
+                req.inflight += tok
+                if tok == 0:
+                    # full cache hit: completes with the next pass; keep a
+                    # zero-token marker so completion is still signaled
+                    self.queues[dp_id].append((req, 0))
+                else:
+                    self.queues[dp_id].append((req, tok))
+
+    def backlog(self, dp_id: int) -> int:
+        return sum(t for _, t in self.queues[dp_id])
+
+    def has_work(self) -> bool:
+        return any(self.queues[d] for d in self.dp_ids)
+
+    # ------------------------------------------------------------------
+    def start_pass(self, now: float) -> Optional[float]:
+        """Begin a forward pass; returns its duration or None if idle."""
+        if self.busy or not self.has_work():
+            return None
+        batch: Dict[int, List[Tuple[Request, int]]] = {}
+        for d in self.dp_ids:
+            budget = self.chunk
+            taken: List[Tuple[Request, int]] = []
+            q = self.queues[d]
+            while q and budget >= 0:
+                req, tok = q[0]
+                if tok == 0:
+                    q.popleft()
+                    taken.append((req, 0))
+                    continue
+                if budget == 0:
+                    break
+                use = min(tok, budget)
+                if use == tok:
+                    q.popleft()
+                else:
+                    q[0] = (req, tok - use)
+                taken.append((req, use))
+                budget -= use
+                if req.prefill_start is None:
+                    req.prefill_start = now
+            if taken:
+                batch[d] = taken
+        if not batch:
+            return None
+        self._current = batch
+        self.busy = True
+        dp_tokens = [sum(t for _, t in batch.get(d, [])) for d in self.dp_ids]
+        dur = self.cost.prefill_pass_time(dp_tokens, chunk=self.chunk)
+        self.passes += 1
+        self.capacity_offered += len(self.dp_ids) * self.chunk
+        return dur
+
+    def finish_pass(self, now: float) -> PassResult:
+        assert self.busy and self._current is not None
+        evs: List[EndForward] = []
+        completed: List[Request] = []
+        processed: Dict[int, int] = {}
+        for d in self.dp_ids:
+            taken = self._current.get(d, [])
+            ptok = sum(t for _, t in taken)
+            processed[d] = ptok
+            self.tokens_processed += ptok
+            for req, tok in taken:
+                req.inflight -= tok
+                if req.inflight == 0 and req.remaining_prefill == 0:
+                    req.first_token_time = now
+                    completed.append(req)
+            evs.append(EndForward(
+                instance_id=self.instance_id, dp_id=d,
+                exec_time=0.0,                    # filled by the sim
+                processed_tokens=ptok,
+                remaining_tokens=self.backlog(d),
+                timestamp=now))
+        self._current = None
+        self.busy = False
+        return PassResult(evs, completed, processed)
+
+    @property
+    def chunk_utilization(self) -> float:
+        if self.capacity_offered == 0:
+            return 0.0
+        return self.tokens_processed / self.capacity_offered
+
+
+class SimDecodeInstance:
+    """Decode instance: DP units step together behind the sync barrier."""
+
+    def __init__(self, instance_id: int, dp_ids: Sequence[int],
+                 cost: CostModel):
+        self.instance_id = instance_id
+        self.dp_ids = list(dp_ids)
+        self.cost = cost
+        self.running: Dict[int, List[Request]] = {d: [] for d in dp_ids}
+        self.busy = False
+        self.tokens_generated = 0
+        self.steps = 0
+
+    def admit(self, dp_id: int, req: Request) -> None:
+        self.running[dp_id].append(req)
+
+    def has_work(self) -> bool:
+        return any(self.running[d] for d in self.dp_ids)
+
+    def start_step(self, dp_states) -> Optional[float]:
+        if self.busy or not self.has_work():
+            return None
+        self.busy = True
+        by_id = {s.dp_id: s for s in dp_states}
+        batches = [len(self.running[d]) for d in self.dp_ids]
+        kvs = [by_id[d].kv_tokens for d in self.dp_ids]
+        self.steps += 1
+        return self.cost.decode_step_time(batches, kvs)
+
+    def finish_step(self, now: float, dp_states) -> List[Request]:
+        """Each running request emits one token; returns finished requests."""
+        assert self.busy
+        self.busy = False
+        by_id = {s.dp_id: s for s in dp_states}
+        finished: List[Request] = []
+        for d in self.dp_ids:
+            alive: List[Request] = []
+            st = by_id[d]
+            n = len(self.running[d])
+            if n:
+                st.step()                       # K_i += B_i
+                self.tokens_generated += n
+            for req in self.running[d]:
+                req.generated += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                if req.generated >= req.output_len:
+                    req.finish_time = now
+                    st.release(req.input_len + req.generated)
+                    finished.append(req)
+                else:
+                    alive.append(req)
+            self.running[d] = alive
+        return finished

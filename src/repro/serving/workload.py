@@ -1,0 +1,96 @@
+"""Synthetic workloads matching the paper's §5 evaluation traffic.
+
+- short:  input lengths 0–3K tokens, mean ≈ 1K   (Fig 6a; Chunk 3K)
+- long:   input lengths 3K–64K tokens, mean ≈ 6.7K (Fig 6b; Chunk 16K)
+- decode: combined in+out ≈ 2.5K tokens, avg batch 35 (Fig 7/8)
+
+Arrivals are Poisson (the M in the paper's M/D/S analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Iterator, List, Optional
+
+from repro.core.types import Request
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    name: str
+    min_len: int
+    max_len: int
+    mean_len: float
+    out_mean: int = 200
+    sigma: float = 0.8            # lognormal shape (tail heaviness)
+
+
+SHORT = WorkloadSpec("short", 16, 3000, 1000.0)
+LONG = WorkloadSpec("long", 3000, 64000, 6700.0)
+DECODE = WorkloadSpec("decode", 512, 4096, 2000.0, out_mean=500)
+
+SPECS = {"short": SHORT, "long": LONG, "decode": DECODE}
+
+
+def _lognormal_params(spec: WorkloadSpec) -> tuple:
+    """Pick (mu, sigma) so the clipped lognormal lands near the target mean."""
+    mean = spec.mean_len
+    sigma = spec.sigma
+    mu = math.log(mean) - 0.5 * sigma ** 2
+    return mu, sigma
+
+
+def sample_length(spec: WorkloadSpec, rng: random.Random) -> int:
+    mu, sigma = _lognormal_params(spec)
+    v = int(rng.lognormvariate(mu, sigma))
+    return max(spec.min_len, min(spec.max_len, v))
+
+
+def sample_output_len(spec: WorkloadSpec, rng: random.Random) -> int:
+    # geometric-ish output lengths
+    return max(1, int(rng.expovariate(1.0 / spec.out_mean)))
+
+
+def generate(
+    spec: WorkloadSpec,
+    qps: float,
+    duration: float,
+    seed: int = 0,
+    with_tokens: bool = False,
+    shared_prefix_prob: float = 0.0,
+    vocab: int = 50000,
+) -> List[Request]:
+    """Poisson arrivals over [0, duration). Optionally attach token ids with
+    shared prefixes (for cache-aware scheduling experiments)."""
+    rng = random.Random(seed)
+    reqs: List[Request] = []
+    t = 0.0
+    rid = 0
+    prefixes = [tuple(rng.randrange(vocab) for _ in range(256))
+                for _ in range(4)]
+    while True:
+        t += rng.expovariate(qps)
+        if t >= duration:
+            break
+        L = sample_length(spec, rng)
+        tokens = None
+        if with_tokens:
+            if rng.random() < shared_prefix_prob:
+                pre = prefixes[rng.randrange(len(prefixes))]
+                body = tuple(rng.randrange(vocab)
+                             for _ in range(max(L - len(pre), 0)))
+                tokens = (pre + body)[:L]
+            else:
+                tokens = tuple(rng.randrange(vocab) for _ in range(L))
+        reqs.append(Request(
+            rid=rid, arrival_time=t, input_len=L,
+            output_len=sample_output_len(spec, rng), tokens=tokens))
+        rid += 1
+    return reqs
+
+
+def empirical_mean_len(spec: WorkloadSpec, n: int = 20000, seed: int = 1
+                       ) -> float:
+    rng = random.Random(seed)
+    return sum(sample_length(spec, rng) for _ in range(n)) / n

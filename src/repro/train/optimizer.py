@@ -1,0 +1,62 @@
+"""AdamW + global-norm clipping in pure JAX (pytree-native).
+
+Moments are stored in f32 regardless of param dtype; with
+ParallelConfig.zero1 the launcher shards the moment pytrees over the data
+axis (ZeRO-1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, opt_state, lr,
+                 beta1: float = 0.9, beta2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: float = 1.0):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = beta1 * mu + (1 - beta1) * g32
+        nu = beta2 * nu + (1 - beta2) * jnp.square(g32)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"grad_norm": gnorm}

@@ -1,0 +1,47 @@
+"""LR schedules. WSD (Warmup-Stable-Decay) is the MiniCPM schedule
+[arXiv:2404.06395 §4]: linear warmup → constant plateau → exponential-ish
+decay tail (we use the paper's 1-sqrt variant linearly-interpolable form)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                 stable_frac: float = 0.8, final_frac: float = 0.1
+                 ) -> Callable:
+    decay_start = int(total_steps * stable_frac)
+    decay_steps = max(total_steps - decay_start, 1)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        decay = peak_lr * (1.0 - (1.0 - final_frac) * jnp.sqrt(frac))
+        return jnp.where(step < decay_start, warm, decay)
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn
+
+
+def make_schedule(name: str, peak_lr: float, warmup_steps: int,
+                  total_steps: int, stable_frac: float = 0.8) -> Callable:
+    if name == "wsd":
+        return wsd_schedule(peak_lr, warmup_steps, total_steps, stable_frac)
+    if name == "cosine":
+        return cosine_schedule(peak_lr, warmup_steps, total_steps)
+    if name == "constant":
+        return lambda step: jnp.full((), peak_lr, jnp.float32)
+    raise ValueError(name)

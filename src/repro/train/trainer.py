@@ -1,0 +1,91 @@
+"""Training loop: jitted AdamW step over any registered architecture, with
+WSD/cosine schedules, packing-aware batches, and checkpointing."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.config.base import ModelConfig, TrainConfig
+from repro.models import forward_train, init_params
+from repro.train.optimizer import adamw_init, adamw_update
+from repro.train.schedule import make_schedule
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    remat: bool = False) -> Callable:
+    schedule = make_schedule(tcfg.schedule, tcfg.lr, tcfg.warmup_steps,
+                             tcfg.total_steps, tcfg.stable_frac)
+
+    def step_fn(params, opt_state, batch):
+        def loss(p):
+            l, metrics = forward_train(cfg, p, batch, remat=remat)
+            return l, metrics
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        lr = schedule(opt_state["step"])
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return step_fn
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 ckpt_dir: Optional[str] = None, remat: bool = False,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.ckpt_dir = ckpt_dir
+        self.params = init_params(cfg, jax.random.PRNGKey(tcfg.seed), dtype)
+        self.opt_state = adamw_init(self.params)
+        self.step = 0
+        self._fn = jax.jit(make_train_step(cfg, tcfg, remat),
+                           donate_argnums=(0, 1))
+        if ckpt_dir and latest_step(ckpt_dir) is not None:
+            self.restore()
+
+    def restore(self) -> None:
+        tree = {"params": self.params, "opt": self.opt_state}
+        tree, step, _ = load_checkpoint(self.ckpt_dir, tree)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+
+    def save(self) -> None:
+        if self.ckpt_dir:
+            save_checkpoint(self.ckpt_dir, self.step,
+                            {"params": self.params, "opt": self.opt_state})
+
+    def fit(self, batches: Iterator[Dict], steps: int,
+            log_every: int = 10, save_every: int = 0,
+            log_fn: Callable[[str], None] = print) -> Dict:
+        history = []
+        t0 = time.monotonic()
+        for _ in range(steps):
+            batch = next(batches)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, m = self._fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if log_every and self.step % log_every == 0:
+                ce = float(m["ce"])
+                history.append((self.step, ce))
+                dt = time.monotonic() - t0
+                log_fn(f"step {self.step:5d} ce={ce:.4f} "
+                       f"loss={float(m['loss']):.4f} "
+                       f"lr={float(m['lr']):.2e} "
+                       f"gnorm={float(m['grad_norm']):.2f} "
+                       f"({dt:.1f}s)")
+            if save_every and self.step % save_every == 0:
+                self.save()
+        return {"history": history, "final_ce": history[-1][1] if history
+                else None}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — tests
+# and benches must see the real (1-device) platform; only launch/dryrun.py
+# forces 512 host devices (in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

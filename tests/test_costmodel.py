@@ -1,0 +1,65 @@
+"""Roofline cost model + workload sanity."""
+import pytest
+
+from repro.config import get_arch
+from repro.serving.costmodel import CostModel, HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.serving.workload import (
+    LONG, SHORT, WorkloadSpec, empirical_mean_len, generate, sample_length,
+)
+
+
+def test_prefill_time_monotone_and_floor():
+    cm = CostModel(get_arch("deepseek-v3-671b"))
+    t1 = cm.prefill_dp_time(1024)
+    t2 = cm.prefill_dp_time(3072)
+    assert 0 < t1 < t2
+    # §3.2 batch-insensitive latency: partial passes cost >= min_fill·chunk
+    floor = cm.prefill_pass_time([100], chunk=3072)
+    assert floor >= cm.prefill_dp_time(int(3072 * cm.min_fill))
+
+
+def test_pass_time_is_straggler_bound():
+    cm = CostModel(get_arch("deepseek-v3-671b"), min_fill=0.0)
+    balanced = cm.prefill_pass_time([1000, 1000, 1000, 1000])
+    skewed = cm.prefill_pass_time([4000, 0, 0, 0])
+    assert skewed > balanced          # sync barrier: max over DP units
+
+
+def test_decode_time_couples_B_and_K():
+    cm = CostModel(get_arch("deepseek-v3-671b"))
+    base = cm.decode_dp_time(batch=32, kv_tokens=50_000)
+    more_kv = cm.decode_dp_time(batch=32, kv_tokens=150_000)
+    more_b = cm.decode_dp_time(batch=64, kv_tokens=50_000)
+    assert more_kv > base             # K_i term (HBM reads)
+    assert more_b > base              # B_i term (all-to-all bytes)
+
+
+def test_mla_kv_bytes_much_smaller_than_mha():
+    mla = CostModel(get_arch("minicpm3-4b")).kv_bytes_per_token
+    mha = CostModel(get_arch("deepseek-7b")).kv_bytes_per_token
+    assert mla * 10 < mha
+
+
+def test_ssm_has_no_per_token_kv():
+    cm = CostModel(get_arch("mamba2-370m"))
+    assert cm.kv_bytes_per_token == 0
+
+
+def test_workload_means_match_paper():
+    # paper §5.1: 0–3K mean ~1K; 3K–64K mean ~6.7K
+    assert empirical_mean_len(SHORT) == pytest.approx(1000, rel=0.15)
+    assert empirical_mean_len(LONG) == pytest.approx(6700, rel=0.25)
+
+
+def test_workload_poisson_rate():
+    reqs = generate(SHORT, qps=100, duration=30, seed=0)
+    assert len(reqs) == pytest.approx(3000, rel=0.1)
+    assert all(reqs[i].arrival_time < reqs[i + 1].arrival_time
+               for i in range(len(reqs) - 1))
+
+
+def test_shared_prefix_generation():
+    reqs = generate(SHORT, qps=50, duration=5, seed=0, with_tokens=True,
+                    shared_prefix_prob=1.0)
+    pres = {r.tokens[:64] for r in reqs if len(r.tokens) >= 64}
+    assert len(pres) <= 4             # drawn from 4 shared prefixes

@@ -1,0 +1,176 @@
+"""Distribution layer: sharding rules, annotations, EP shard_map MoE,
+HLO analysis. Multi-device pieces run in a subprocess (device count must be
+forced before jax initializes)."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (
+    analyze_hlo, parse_computations, _shape_bytes,
+)
+
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sub(code: str, timeout: int = 420) -> str:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout,
+                         env={**os.environ, "PYTHONPATH": "src"}, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3]{1,0}") == 24
+    assert _shape_bytes("(bf16[4]{0}, s32[2]{0})") == 16
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_hlo_analysis_counts_loop_flops():
+    """Trip-count-aware analyzer: a dot inside a while body with trip N
+    counts N×."""
+    hlo = """HloModule test, entry_computation_layout={()->f32[4,4]{1,0}}
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %c = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main () -> f32[4,4] {
+  %zero = s32[] constant(0)
+  %init = f32[4,4]{1,0} constant({...})
+  %t0 = (s32[], f32[4,4]{1,0}) tuple(%zero, %init)
+  %w = (s32[], f32[4,4]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    r = analyze_hlo(hlo)
+    # one 4x4x4 dot (128 flops) x 7 iterations
+    assert r["flops"] == pytest.approx(7 * 2 * 4 * 4 * 4)
+
+
+def test_sharding_rules_divisibility_fallbacks():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.config import get_arch
+from repro.config.base import ParallelConfig
+from repro.launch.mesh import make_test_mesh
+from repro.distributed.sharding import param_pspecs
+from repro.models import abstract_params
+
+mesh = make_test_mesh(2, 4)
+par = ParallelConfig()
+# whisper: 20 heads % 4 == 0 -> head sharding OK on 4-way model axis
+cfg = get_arch("whisper-large-v3", reduced=True)   # 4 heads % 4 == 0
+specs = param_pspecs(cfg, mesh, par, abstract_params(cfg, jnp.bfloat16))
+wq = specs["blocks"]["p0"]["attn"]["w_q"]
+assert wq == P(None, None, "model", None), wq      # (R, D, H=4, hd) H@model
+# internvl2 reduced kv=2: 2 % 4 != 0 -> kv heads replicated, q row-parallel ok
+cfg2 = get_arch("internvl2-1b", reduced=True)
+specs2 = param_pspecs(cfg2, mesh, par, abstract_params(cfg2, jnp.bfloat16))
+wk = specs2["blocks"]["p0"]["attn"]["w_k"]
+assert "model" not in str(wk[2]) if len(wk) > 2 else True
+print("SPECS_OK")
+"""
+    assert "SPECS_OK" in _sub(code)
+
+
+def test_moe_ep_shard_map_matches_reference():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.config.base import MoEConfig
+from repro.models.moe import init_moe_params, moe_block
+from repro.models.moe_ep import moe_block_ep
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh(2, 4)
+mc = MoEConfig(num_experts=8, top_k=2, d_expert=32, capacity_factor=8.0)
+p = init_moe_params(jax.random.PRNGKey(0), 16, mc, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16)) * 0.5
+o_ref, _ = moe_block(x, p, mc)
+for ep in (("model",), ("data", "model")):
+    o_ep, _ = jax.jit(lambda x, p: moe_block_ep(
+        x, p, mc, mesh, ("data",), ep))(x, p)
+    assert np.abs(np.asarray(o_ep - o_ref)).max() < 1e-5, ep
+print("EP_OK")
+"""
+    assert "EP_OK" in _sub(code)
+
+
+def test_annotate_noop_without_mesh():
+    from repro.distributed.annotate import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "tokens", None) is x
+
+
+def test_annotate_applies_under_mesh():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_test_mesh
+from repro.distributed.annotate import activate, constrain
+
+mesh = make_test_mesh(2, 2)
+with activate(mesh, {"tokens": ("data",), "model": "model"}):
+    @jax.jit
+    def f(x):
+        return constrain(x * 2, "tokens", "model")
+    y = f(jnp.ones((4, 8)))
+    assert "data" in str(y.sharding)
+    # non-divisible dim -> silently skipped
+    @jax.jit
+    def g(x):
+        return constrain(x * 2, "tokens", None)
+    g(jnp.ones((3, 8)))
+print("ANN_OK")
+"""
+    assert "ANN_OK" in _sub(code)
+
+
+def test_seq_parallel_fallback_constraint():
+    """forward_full applies the attn_seq constraint when mapped."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.config import get_arch
+from repro.launch.mesh import make_test_mesh
+from repro.distributed.annotate import activate
+from repro.models import init_params
+from repro.models.model import forward_full
+
+mesh = make_test_mesh(2, 2)
+cfg = get_arch("deepseek-7b", reduced=True)
+params = init_params(cfg, jax.random.PRNGKey(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+x_ref, _, _, _ = forward_full(cfg, params, tokens)
+with activate(mesh, {"tokens": ("data",), "model": "model",
+                     "attn_seq": "model"}):
+    x_sp = jax.jit(lambda p, t: forward_full(cfg, p, t)[0])(params, tokens)
+import numpy as np
+assert np.abs(np.asarray(x_sp - x_ref)).max() < 2e-3
+print("SEQPAR_OK")
+"""
+    assert "SEQPAR_OK" in _sub(code)

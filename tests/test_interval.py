@@ -1,0 +1,61 @@
+"""Algorithm 1 — adaptive interval controller."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interval import AdaptiveIntervalController
+
+
+def test_formula():
+    ic = AdaptiveIntervalController(window_size=8, l_net=0.01, t_default=0.2,
+                                    n_active=4)
+    assert ic.interval == pytest.approx((0.2 + 0.01) / 4)
+
+
+def test_moving_average_window_eviction():
+    ic = AdaptiveIntervalController(window_size=3, l_net=0.0, t_default=1.0,
+                                    n_active=1)
+    for t in [1.0, 2.0, 3.0]:
+        ic.on_end_forward(t)
+    assert ic.t_fwd == pytest.approx(2.0)
+    ic.on_end_forward(10.0)          # evicts the 1.0 sample
+    assert ic.t_fwd == pytest.approx((2 + 3 + 10) / 3)
+    assert ic.interval == pytest.approx(ic.t_fwd / 1)
+
+
+def test_topology_change_immediate():
+    ic = AdaptiveIntervalController(t_default=0.4, l_net=0.0, n_active=2)
+    i0 = ic.interval
+    ic.on_topology_change(8)
+    assert ic.interval == pytest.approx(i0 / 4)
+    ic.on_topology_change(0)
+    assert ic.interval == float("inf")   # no capacity: hold
+
+
+def test_watchdog_is_5x():
+    ic = AdaptiveIntervalController(t_default=0.3, n_active=1)
+    assert ic.watchdog_timeout == pytest.approx(1.5)
+
+
+def test_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        AdaptiveIntervalController(window_size=0)
+    ic = AdaptiveIntervalController()
+    with pytest.raises(ValueError):
+        ic.on_end_forward(-1.0)
+
+
+@given(ts=st.lists(st.floats(1e-4, 10.0), min_size=1, max_size=100),
+       n=st.integers(1, 64), lnet=st.floats(0.0, 0.1))
+@settings(max_examples=60, deadline=None)
+def test_interval_always_matches_mean_over_window(ts, n, lnet):
+    w = 16
+    ic = AdaptiveIntervalController(window_size=w, l_net=lnet, n_active=n)
+    for t in ts:
+        ic.on_end_forward(t)
+    mean = sum(ts[-w:]) / len(ts[-w:])
+    assert ic.interval == pytest.approx((mean + lnet) / n)
+    # I_opt scales 1/N: doubling capacity halves the interval
+    ic.on_topology_change(2 * n)
+    assert ic.interval == pytest.approx((mean + lnet) / (2 * n))

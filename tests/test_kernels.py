@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps as required."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_prefill.ops import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+from repro.kernels.ssd_scan.ops import ssd_chunk_kernel_apply
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=0.5):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,hd,bq,bk", [
+    (1, 64, 2, 2, 32, 32, 32),
+    (2, 64, 4, 2, 32, 16, 64),
+    (1, 128, 8, 1, 16, 64, 32),
+])
+def test_flash_prefill_sweep(dtype, B, S, H, K, hd, bq, bk):
+    q = _rand(0, (B, S, H, hd), dtype)
+    k = _rand(1, (B, S, K, hd), dtype)
+    v = _rand(2, (B, S, K, hd), dtype)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    seg = jnp.zeros((B, S), jnp.int32)
+    o1 = flash_prefill(q, k, v, pos, pos, seg, seg, block_q=bq, block_kv=bk)
+    o2 = flash_prefill_ref(q, k, v, pos, pos, seg, seg)
+    assert np.abs(np.asarray(o1 - o2, np.float32)).max() < TOLS[dtype]
+
+
+def test_flash_prefill_packed_varlen_with_padding():
+    """The paper's C_chunk case: multiple segments + padding in one chunk."""
+    B, S, H, K, hd = 2, 64, 4, 2, 32
+    q, k, v = (_rand(i, (B, S, H, hd)) for i in range(3))
+    pos = jnp.tile(jnp.concatenate(
+        [jnp.arange(24), jnp.arange(30), jnp.zeros(10, jnp.int32)]), (B, 1))
+    seg = jnp.tile(jnp.concatenate(
+        [jnp.zeros(24, jnp.int32), jnp.ones(30, jnp.int32),
+         -jnp.ones(10, jnp.int32)]), (B, 1))
+    o1 = flash_prefill(q, k, v, pos, pos, seg, seg, block_q=32, block_kv=32)
+    o2 = flash_prefill_ref(q, k, v, pos, pos, seg, seg)
+    assert np.abs(np.asarray(o1 - o2)).max() < 1e-5
+    assert np.abs(np.asarray(o1[:, 54:])).max() == 0.0   # padding rows zero
+
+
+def test_flash_prefill_sliding_window():
+    B, S, H, K, hd = 1, 64, 2, 2, 32
+    q, k, v = (_rand(i, (B, S, H, hd)) for i in range(3))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    seg = jnp.zeros((B, S), jnp.int32)
+    o1 = flash_prefill(q, k, v, pos, pos, seg, seg, window=8,
+                       block_q=32, block_kv=32)
+    o2 = flash_prefill_ref(q, k, v, pos, pos, seg, seg, window=8)
+    assert np.abs(np.asarray(o1 - o2)).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,hd,bk", [
+    (2, 128, 8, 2, 64, 32),
+    (3, 64, 4, 4, 32, 64),
+    (1, 256, 16, 1, 16, 128),
+])
+def test_decode_attention_sweep(dtype, B, S, H, K, hd, bk):
+    q = _rand(0, (B, H, hd), dtype)
+    kc = _rand(1, (B, S, K, hd), dtype)
+    vc = _rand(2, (B, S, K, hd), dtype)
+    pos = jnp.asarray([min(5 + 61 * b, S - 1) for b in range(B)])
+    kv_pos = jnp.where(jnp.arange(S)[None] <= pos[:, None],
+                       jnp.arange(S)[None], -1)
+    o1 = decode_attention(q, kc, vc, kv_pos, pos, block_kv=bk)
+    o2 = decode_attention_ref(q, kc, vc, kv_pos, pos)
+    assert np.abs(np.asarray(o1 - o2, np.float32)).max() < TOLS[dtype]
+
+
+def test_decode_attention_window_ring():
+    B, S, H, K, hd = 2, 64, 4, 2, 32
+    q = _rand(0, (B, H, hd))
+    kc, vc = _rand(1, (B, S, K, hd)), _rand(2, (B, S, K, hd))
+    pos = jnp.asarray([40, 63])
+    kv_pos = jnp.where(jnp.arange(S)[None] <= pos[:, None],
+                       jnp.arange(S)[None], -1)
+    o1 = decode_attention(q, kc, vc, kv_pos, pos, window=16, block_kv=32)
+    o2 = decode_attention_ref(q, kc, vc, kv_pos, pos, window=16)
+    assert np.abs(np.asarray(o1 - o2)).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,nc,Q,nh,hp,ds", [
+    (2, 3, 16, 4, 32, 16),
+    (1, 2, 32, 2, 16, 8),
+    (1, 1, 64, 8, 64, 32),
+])
+def test_ssd_chunk_sweep(dtype, B, nc, Q, nh, hp, ds):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = (jax.random.normal(ks[0], (B, nc, Q, nh, hp)) * 0.3).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, nh)))
+    A = -jnp.exp(jnp.linspace(0.0, 1.0, nh))
+    Bm = (jax.random.normal(ks[2], (B, nc, Q, ds)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[3], (B, nc, Q, ds)) * 0.3).astype(dtype)
+    y1, s1 = ssd_chunk_kernel_apply(x, dt, A, Bm, Cm)
+    y2, s2 = ssd_chunk_ref(x, dt, A, Bm, Cm)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert np.abs(np.asarray(y1 - y2)).max() < tol
+    assert np.abs(np.asarray(s1 - s2)).max() < tol

@@ -1,0 +1,129 @@
+"""Algorithm 2 — Prioritized Batch Allocation (water-filling bin packing)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prefill_alloc import chunk_utilization, greedy_dispatch, pbaa
+from repro.core.prefix_cache import PrefixCacheIndex
+from repro.core.types import DPState, Request
+
+
+def mk_dps(n, chunk=1000, inst=0):
+    return [DPState(dp_id=i, instance_id=inst, c_chunk=chunk)
+            for i in range(n)]
+
+
+def mk_req(rid, length, arrival=0.0):
+    return Request(rid=rid, arrival_time=arrival, input_len=length)
+
+
+def test_water_filling_balances_load():
+    dps = mk_dps(4, chunk=1000)
+    reqs = [mk_req(i, l) for i, l in enumerate([900, 800, 500, 400, 300,
+                                                200, 100, 100])]
+    assign, q_next, over = pbaa([], reqs, dps)
+    assert not q_next and not over
+    loads = {d: sum(t for _, t in lst) for d, lst in assign.items()}
+    # longest-first → max-capacity: loads end up near-uniform
+    assert max(loads.values()) - min(loads.values()) <= 400
+    assert sum(loads.values()) == 3300
+
+
+def test_legacy_requests_dispatch_first():
+    dps = mk_dps(1, chunk=100)
+    old = mk_req(0, 100)
+    old.wait_cycles = 3
+    new = mk_req(1, 100)
+    assign, q_next, _ = pbaa([old], [new], dps)
+    granted = [r.rid for lst in assign.values() for r, _ in lst]
+    assert granted == [0]            # phase 1 fills the chunk; new waits
+    assert [r.rid for r in q_next] == [1]
+
+
+def test_chunking_splits_long_request():
+    dps = mk_dps(2, chunk=1000)
+    req = mk_req(0, 3500)
+    assign, q_next, _ = pbaa([], [req], dps)
+    total = sum(t for lst in assign.values() for _, t in lst)
+    assert total == 1000             # one chunk granted this cycle
+    assert req.remaining_prefill == 2500
+    assert req in q_next
+    # pinned: the tail must continue on the SAME DP (its KV lives there)
+    first_dp = req.assigned_dp
+    for d in dps:
+        d.u_flight = 0               # engine drained
+    assign2, _, _ = pbaa(q_next, [], dps)
+    assert list(assign2.keys()) == [first_dp]
+
+
+def test_overload_triggers_flow_control():
+    dps = mk_dps(1, chunk=10)
+    dps[0].u_flight = 10             # saturated
+    req = mk_req(0, 5)
+    pend = [req]
+    for _ in range(9):
+        assign, pend, over = pbaa(pend, [], dps, n_limit=8)
+        assert not assign
+    assert over and over[0].rid == 0  # exceeded N_limit
+
+
+def test_cache_aware_prefers_cache_hit_dp():
+    dps = mk_dps(2, chunk=1000)
+    cache = PrefixCacheIndex([0, 1], block=4)
+    toks = tuple(range(64))
+    cache.insert(1, toks)            # dp 1 holds this prefix
+    req = Request(rid=0, arrival_time=0, input_len=64, tokens=toks)
+    assign, _, _ = pbaa([], [req], dps, cache=cache)
+    assert list(assign.keys()) == [1]
+    (r, granted), = assign[1]
+    assert granted == 0              # full cache hit: zero compute cost
+
+
+def test_chunk_utilization_metric():
+    dps = mk_dps(2, chunk=100)
+    assign = {0: [(mk_req(0, 80), 80)], 1: [(mk_req(1, 70), 70)]}
+    assert chunk_utilization(assign, dps) == pytest.approx(0.75)
+
+
+@given(
+    lengths=st.lists(st.integers(1, 5000), min_size=1, max_size=40),
+    n_dp=st.integers(1, 8),
+    chunk=st.integers(64, 4096),
+)
+@settings(max_examples=80, deadline=None)
+def test_pbaa_invariants(lengths, n_dp, chunk):
+    dps = mk_dps(n_dp, chunk=chunk)
+    reqs = [mk_req(i, l) for i, l in enumerate(lengths)]
+    assign, q_next, over = pbaa([], reqs, dps)
+    # 1. no DP is granted more than its available chunk capacity
+    for d, lst in assign.items():
+        assert sum(t for _, t in lst) <= chunk
+    # 2. token conservation: granted + remaining == total
+    granted = {r.rid: 0 for r in reqs}
+    for lst in assign.values():
+        for r, t in lst:
+            granted[r.rid] += t
+    for r in reqs:
+        assert granted[r.rid] + r.remaining_prefill == r.input_len
+    # 3. every request is granted, queued, or flow-controlled
+    ids = set(granted[r.rid] > 0 or r.remaining_prefill > 0 for r in reqs)
+    assert set(r.rid for r in q_next) | set(r.rid for r in over) | {
+        r.rid for r in reqs if r.remaining_prefill == 0} == {
+        r.rid for r in reqs}
+
+
+@given(
+    lengths=st.lists(st.integers(1, 900), min_size=2, max_size=30),
+    n_dp=st.integers(2, 8),
+)
+@settings(max_examples=60, deadline=None)
+def test_water_filling_lpt_bound(lengths, n_dp):
+    """Longest-first water-filling is greedy list scheduling: the max
+    per-DP load obeys Graham's bound  makespan ≤ total/m + (1 − 1/m)·L_max."""
+    chunk = 10 ** 9                  # capacity never binds
+    dps = mk_dps(n_dp, chunk=chunk)
+    reqs = [mk_req(i, l) for i, l in enumerate(lengths)]
+    assign = {}
+    greedy_dispatch(reqs, dps, assign)
+    wf_max = max(sum(t for _, t in lst) for lst in assign.values())
+    bound = sum(lengths) / n_dp + (1 - 1 / n_dp) * max(lengths)
+    assert wf_max <= bound + 1e-9

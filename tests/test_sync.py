@@ -1,0 +1,55 @@
+"""§4.1.2 — multi-tier state synchronization protocol."""
+from repro.core.sync import Readiness, SyncProtocol
+
+
+def test_quiescence_path():
+    sp = SyncProtocol(2)
+    assert sp.readiness(0, 0.0) == Readiness.READY_QUIESCENT
+
+
+def test_endforward_fast_path():
+    sp = SyncProtocol(1)
+    sp.on_dispatch(0, 0.0, t_fwd_est=0.1)
+    assert sp.readiness(0, 0.01) == Readiness.BUSY
+    sp.on_end_forward(0, 0.09)
+    assert sp.is_ready(0, 0.1)
+
+
+def test_watchdog_forces_reset():
+    sp = SyncProtocol(1, watchdog_multiplier=5.0)
+    sp.on_dispatch(0, 0.0, t_fwd_est=0.1)
+    assert sp.readiness(0, 0.49) == Readiness.BUSY
+    # past 5×T̄ with no EndForward: liveness reset
+    assert sp.readiness(0, 0.51) == Readiness.READY_WATCHDOG
+    assert sp.task_depth(0) == 0
+
+
+def test_degradation_and_recovery():
+    sp = SyncProtocol(1, degrade_after_trips=2)
+    for k in range(2):
+        sp.on_dispatch(0, k * 10.0, t_fwd_est=0.1)
+        assert sp.readiness(0, k * 10.0 + 1.0) == Readiness.READY_WATCHDOG
+    assert sp.is_degraded(0)         # fixed-interval fallback mode
+    sp.on_dispatch(0, 100.0, t_fwd_est=0.1)
+    sp.on_end_forward(0, 100.05)     # healthy signal clears degradation
+    assert not sp.is_degraded(0)
+
+
+def test_task_depth_counts_outstanding_batches():
+    sp = SyncProtocol(1)
+    sp.on_dispatch(0, 0.0, 0.1)
+    sp.on_dispatch(0, 0.01, 0.1)
+    assert sp.task_depth(0) == 2
+    sp.on_end_forward(0, 0.1)
+    assert sp.task_depth(0) == 1
+    assert sp.readiness(0, 0.1) == Readiness.BUSY   # still one in flight
+    sp.on_end_forward(0, 0.2)
+    assert sp.readiness(0, 0.2) == Readiness.READY_QUIESCENT
+
+
+def test_next_watchdog_deadline():
+    sp = SyncProtocol(2)
+    assert sp.next_watchdog_deadline(0.0) is None
+    sp.on_dispatch(0, 0.0, 0.1)
+    sp.on_dispatch(1, 0.2, 0.1)
+    assert sp.next_watchdog_deadline(0.0) == 0.5
