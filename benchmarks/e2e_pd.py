@@ -1,5 +1,7 @@
 """End-to-end P/D-disaggregated pipeline (3P1D): SBS on both phases vs
-immediate dispatch — TTFT, TPOT, and goodput including the KV transfer."""
+immediate dispatch — TTFT, TPOT, and goodput including the KV transfer —
+under three traffic scenarios: steady Poisson, bursty (MMPP flash
+crowds), and long-context heavy-tail."""
 from __future__ import annotations
 
 from typing import List
@@ -10,6 +12,18 @@ from repro.serving.workload import WorkloadSpec, generate
 
 from benchmarks.common import ARCH
 
+STEADY = WorkloadSpec("e2e", 64, 3000, 1000.0, out_mean=120)
+BURSTY = WorkloadSpec("e2e-bursty", 64, 3000, 1000.0, out_mean=120,
+                      burst_factor=3.0, burst_duty=0.25, burst_period=2.0)
+HEAVY = WorkloadSpec("e2e-heavy", 64, 32768, 2000.0, out_mean=120,
+                     sigma=1.6)
+
+SCENARIOS = (
+    ("steady", STEADY, (40, 70)),
+    ("bursty", BURSTY, (40, 70)),
+    ("heavy_tail", HEAVY, (20, 35)),
+)
+
 
 def main(report) -> List[str]:
     rows: List[str] = []
@@ -18,15 +32,21 @@ def main(report) -> List[str]:
                          num_decode_instances=1, decode_dp_per_instance=32,
                          chunk_size=3072, t_default=0.5,
                          max_batch_per_dp=64, kv_budget_tokens=400_000)
-    spec = WorkloadSpec("e2e", 64, 3000, 1000.0, out_mean=120)
     report("\n## E2E 3P1D pipeline (prefill pool → KV transfer → decode pool)")
-    report(f"{'scheduler':>12} {'qps':>5}  result")
-    for qps in (40, 70):
-        for sched in ("immediate", "sbs"):
-            reqs = generate(spec, qps=qps, duration=15, seed=11)
-            sim = PDClusterSim(cfg, scfg, scheduler=sched)
-            rep = sim.run(reqs, 15, slo_e2e=15.0)
-            report(f"{sched:>12} {qps:>5}  {rep.row()}")
-            rows.append(f"e2e/{sched}/qps={qps},{rep.ttft_mean*1e6:.0f},"
-                        f"goodput={rep.goodput*100:.1f}%")
+    for scen, spec, qpss in SCENARIOS:
+        report(f"### scenario: {scen}")
+        report(f"{'scheduler':>12} {'qps':>5}  result")
+        for qps in qpss:
+            ttft = {}
+            for sched in ("immediate", "sbs", "sbs-la"):
+                reqs = generate(spec, qps=qps, duration=15, seed=11)
+                sim = PDClusterSim(cfg, scfg, scheduler=sched)
+                rep = sim.run(reqs, 15, slo_e2e=15.0)
+                ttft[sched] = rep.ttft_mean
+                report(f"{sched:>12} {qps:>5}  {rep.row()}")
+                rows.append(f"e2e/{scen}/{sched}/qps={qps},"
+                            f"{rep.ttft_mean*1e6:.0f},"
+                            f"goodput={rep.goodput*100:.1f}%")
+            gain = 1 - ttft["sbs"] / ttft["immediate"]
+            report(f"{'':>12} SBS TTFT vs immediate: {gain*100:+.1f}%")
     return rows

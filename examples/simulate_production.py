@@ -1,6 +1,7 @@
 """Reproduce the paper's production-scale experiments in the discrete-event
 simulator: the 3P1D DeepSeek-V3 cluster (§5) — TTFT vs load, chunk
-utilization, and decode balance.
+utilization, and decode balance — plus the bursty and long-context
+heavy-tail traffic scenarios on the unified ClusterRuntime.
 
     PYTHONPATH=src python examples/simulate_production.py [--quick]
 """
@@ -8,7 +9,9 @@ import argparse
 
 from repro.config import ServingConfig, get_arch
 from repro.serving.cluster import DecodeClusterSim, PrefillClusterSim
-from repro.serving.workload import SHORT, WorkloadSpec, generate
+from repro.serving.workload import (
+    BURSTY, HEAVY_TAIL, SHORT, WorkloadSpec, generate,
+)
 
 
 def main():
@@ -30,11 +33,22 @@ def main():
                         f"util={rep.chunk_util*100:4.1f}%")
         print("   ".join(line))
 
+    print("\n== Prefill scenarios: bursty (MMPP) & long-context heavy-tail ==")
+    for name, spec, qps in (("bursty", BURSTY, 80),
+                            ("heavy_tail", HEAVY_TAIL, 25)):
+        line = [f"{name:>10} qps={qps:3d}"]
+        for sched in ("immediate-rr", "sbs"):
+            reqs = generate(spec, qps=qps, duration=dur, seed=7)
+            rep = PrefillClusterSim(cfg, scfg, scheduler=sched).run(reqs, dur)
+            line.append(f"{sched}: ttft={rep.ttft_mean*1000:7.1f}ms "
+                        f"p99={rep.ttft_p99*1000:7.1f}ms")
+        print("   ".join(line))
+
     print("\n== Decode: DP=32, EP=32, closed-loop batch ≈ 35/DP ==")
     dcfg = ServingConfig(num_decode_instances=1, decode_dp_per_instance=32,
                          max_batch_per_dp=64, kv_budget_tokens=200_000)
     spec = WorkloadSpec("decode", 256, 32768, 2000.0, out_mean=500)
-    for sched in ("immediate", "sbs"):
+    for sched in ("immediate", "sbs", "sbs-la"):
         reqs = generate(spec, qps=10_000, duration=5, seed=1)[:15_000]
         sim = DecodeClusterSim(cfg, dcfg, scheduler=sched)
         rep = sim.run(reqs, 30.0 if args.quick else 60.0,

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Reproducible tier-1 entry point.
+#
+#   scripts/ci.sh          fast tier-1: full suite minus @slow model cases
+#                          + a smoke invocation of the benchmark harness
+#   scripts/ci.sh --full   everything, including @slow cases (equivalent
+#                          to the ROADMAP tier-1 command `pytest -x -q`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests =="
+if [[ "${1:-}" == "--full" ]]; then
+    PYTHONPATH=src python -m pytest -q
+else
+    PYTHONPATH=src python -m pytest -q -m "not slow"
+fi
+
+echo "== benchmark smoke (microbench) =="
+out=$(PYTHONPATH=src:. python benchmarks/run.py --only microbench)
+echo "$out"
+if grep -q "BENCH FAILED" <<<"$out"; then
+    echo "benchmark smoke FAILED" >&2
+    exit 1
+fi
+echo "CI OK"

@@ -79,6 +79,56 @@ def schedule_decode_batch(
 
 
 # ---------------------------------------------------------------------------
+# Load-Aware Global Allocation (decode phase, two-level)
+# ---------------------------------------------------------------------------
+
+def schedule_decode_global(
+    requests: Sequence[Request],
+    units: Sequence[DecodeDPState],
+    k: float = 1.5,
+    exclude_instances: frozenset = frozenset(),
+) -> Dict[int, List[Request]]:
+    """Batched decode placement that balances per-DP KV-TOKEN load (not
+    just request count) across DP units within an instance AND across
+    instances.
+
+    Level 1 picks the target instance by least mean-per-unit ⟨K, B⟩ load,
+    so a hot instance sheds traffic to its peers; level 2 picks the DP
+    within it by least ⟨K_i, B_i⟩ — KV load first, batch as tie-break
+    (the dual of Algorithm 3's batch-first order, for memory-bound decode
+    pools).  IQR masking and hard budgets apply over the global DP
+    population exactly as in `iqr_safe_set`.  `exclude_instances` removes
+    quarantined (watchdog-expired) instances from the decision space; if
+    that empties it, the exclusion is ignored rather than dropping work.
+    """
+    eligible = [u for u in units if u.instance_id not in exclude_instances]
+    if not eligible:
+        eligible = list(units)
+    all_of: Dict[int, List[DecodeDPState]] = {}
+    for u in eligible:
+        all_of.setdefault(u.instance_id, []).append(u)
+    out: Dict[int, List[Request]] = {}
+    order = sorted(requests, key=lambda r: -(r.input_len + r.output_len))
+    for req in order:
+        safe = iqr_safe_set(eligible, k)
+        by_inst: Dict[int, List[DecodeDPState]] = {}
+        for u in safe:
+            by_inst.setdefault(u.instance_id, []).append(u)
+        # level-1 load is the mean over ALL the instance's units — masked
+        # (saturated) units still pace its sync barrier, so hiding them
+        # would make a hot instance look cold and attract traffic
+        inst = min(by_inst, key=lambda i: (
+            sum(u.kv_tokens for u in all_of[i]) / len(all_of[i]),
+            sum(u.batch for u in all_of[i]) / len(all_of[i])))
+        best = min(by_inst[inst], key=lambda u: (u.kv_tokens, u.batch))
+        kv_len = req.input_len + req.generated
+        best.admit(kv_len)
+        req.assigned_dp = best.dp_id
+        out.setdefault(best.dp_id, []).append(req)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Immediate-dispatch decode baselines (paper's comparison point)
 # ---------------------------------------------------------------------------
 

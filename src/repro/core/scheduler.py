@@ -21,7 +21,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.decode_alloc import (
-    schedule_decode_batch, schedule_decode_immediate,
+    schedule_decode_batch, schedule_decode_global, schedule_decode_immediate,
 )
 from repro.core.flow_control import FlowAction, FlowController
 from repro.core.interval import AdaptiveIntervalController
@@ -226,20 +226,58 @@ class ImmediatePrefillScheduler(PrefillScheduler):
 
 class DecodeScheduler:
     """SBS decode side: buffer hand-offs inside the batching window, then
-    IQR-aware lexicographical placement (Algorithm 3). mode='immediate'
-    degrades to the paper's baseline policies."""
+    batched placement. mode='immediate' degrades to the paper's baseline
+    policies.
+
+    Two batched allocators:
+      alloc='lex'        — IQR-aware lexicographical placement
+                           (Algorithm 3, batch-size first)
+      alloc='load_aware' — Load-Aware Global Allocation: per-DP KV-token
+                           load balanced within AND across instances
+
+    Watchdog re-dispatch: the driver reports step completions through
+    `on_step_end`; an instance holding dispatched work that has not
+    completed a step within `watchdog_multiplier`×(EWMA step time) is
+    reported by `stalled_instances` and quarantined. The driver drains it
+    and re-places the stranded requests via `place_redispatch`, which
+    excludes quarantined instances. Quarantine lifts on a healthy step or
+    after one further budget of probation (a drained instance receives no
+    work, so the next placement is what re-probes its health). The budget
+    is not enforced until at least one real step time has been observed."""
 
     def __init__(self, state: GlobalState, mode: str = "sbs",
                  policy: str = "round_robin", iqr_k: float = 1.5,
-                 window: float = 0.05):
+                 window: float = 0.05, alloc: str = "lex",
+                 watchdog_multiplier: float = 0.0):
+        if alloc not in ("lex", "load_aware"):
+            raise ValueError(alloc)
         self.state = state
         self.mode = mode
         self.policy = policy
         self.iqr_k = iqr_k
         self.window = window
+        self.alloc = alloc
         self.buffer: List[Request] = []
         self._rr = [0]
         self._last = -float("inf")
+        # watchdog state
+        self.wd_mult = watchdog_multiplier
+        self.quarantined: set = set()
+        self._quarantined_at: Dict[int, float] = {}
+        self._step_est = 0.05           # EWMA of observed step durations
+        self._observed = False          # armed only after a real step time
+        self._waiting_since: Dict[int, float] = {}   # inst -> oldest unacked
+        self._last_step: Dict[int, float] = {}
+
+    def _allocate(self, batch: List[Request]) -> Dict:
+        if self.alloc == "load_aware":
+            return schedule_decode_global(
+                batch, self.state.decode_dps, self.iqr_k,
+                exclude_instances=frozenset(self.quarantined))
+        units = [u for u in self.state.decode_dps
+                 if u.instance_id not in self.quarantined]
+        return schedule_decode_batch(batch, units or self.state.decode_dps,
+                                     self.iqr_k)
 
     def on_handoff(self, req: Request, now: float) -> Optional[Dict]:
         """Prefill finished; route into a decode DP. Immediate mode places
@@ -257,9 +295,77 @@ class DecodeScheduler:
             return None
         batch, self.buffer = self.buffer, []
         self._last = now
-        return schedule_decode_batch(batch, self.state.decode_dps, self.iqr_k)
+        return self._allocate(batch)
 
     def next_event_time(self, now: float) -> Optional[float]:
-        if self.mode == "immediate" or not self.buffer:
+        cands = []
+        if self.mode != "immediate" and self.buffer:
+            cands.append(max(now, self._last + self.window))
+        if self.wd_mult > 0 and self._observed:
+            budget = self.wd_mult * max(self._step_est, 1e-6)
+            # quarantined instances cannot trip again until they step, so
+            # their deadlines must not generate (repeated, past-due) ticks
+            pend = [t for i, t in self._waiting_since.items()
+                    if i not in self.quarantined]
+            if pend:
+                cands.append(min(pend) + budget)
+            if self._quarantined_at:        # probation expiry wake-up
+                cands.append(min(self._quarantined_at.values()) + budget)
+        return min(cands) if cands else None
+
+    # -- watchdog / re-dispatch path ------------------------------------
+
+    def on_placed(self, placements: Dict[int, List[Request]], now: float
+                  ) -> None:
+        """Driver ack: requests physically admitted to instances."""
+        if self.wd_mult <= 0:
+            return
+        dp2inst = {d.dp_id: d.instance_id for d in self.state.decode_dps}
+        for dp_id in placements:
+            self._waiting_since.setdefault(dp2inst[dp_id], now)
+
+    def on_step_end(self, instance_id: int, now: float,
+                    step_time: Optional[float] = None) -> None:
+        """`step_time` is the measured duration of the step that just
+        finished (preferred); without it the inter-completion gap is used,
+        which over-estimates on idle instances."""
+        if step_time is None:
+            prev = self._last_step.get(instance_id)
+            step_time = now - prev if (prev is not None and now > prev) \
+                else None
+        if step_time is not None:
+            if not self._observed:
+                self._step_est = step_time     # snap to the first real sample
+                self._observed = True
+            else:
+                self._step_est = 0.8 * self._step_est + 0.2 * step_time
+        self._last_step[instance_id] = now
+        self._waiting_since.pop(instance_id, None)
+        self.quarantined.discard(instance_id)
+        self._quarantined_at.pop(instance_id, None)
+
+    def stalled_instances(self, now: float) -> List[int]:
+        if self.wd_mult <= 0 or not self._observed:
+            return []          # no budget until a real step time is known
+        budget = self.wd_mult * max(self._step_est, 1e-6)
+        # probation: a drained instance gets no work (it is excluded from
+        # allocation), so it can never step itself healthy — re-admit it
+        # after one further budget and let the next placement re-probe it
+        for inst, since in list(self._quarantined_at.items()):
+            if now - since >= budget - 1e-9:
+                self.quarantined.discard(inst)
+                self._quarantined_at.pop(inst, None)
+        out = []
+        for inst, since in list(self._waiting_since.items()):
+            if now - since >= budget - 1e-9 and inst not in self.quarantined:
+                self.quarantined.add(inst)
+                self._quarantined_at[inst] = now
+                self._waiting_since.pop(inst, None)
+                out.append(inst)
+        return out
+
+    def place_redispatch(self, reqs: List[Request], now: float
+                         ) -> Optional[Dict]:
+        if not reqs:
             return None
-        return max(now, self._last + self.window)
+        return self._allocate(list(reqs))

@@ -35,6 +35,7 @@ class Request:
     generated: int = 0
     assigned_dp: Optional[int] = None
     assigned_instance: Optional[int] = None
+    migrations: int = 0                         # decode watchdog re-dispatches
     # timestamps
     dispatch_time: Optional[float] = None
     prefill_start: Optional[float] = None

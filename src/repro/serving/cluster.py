@@ -1,20 +1,19 @@
-"""Discrete-event cluster simulator — reproduces the paper's §5 experiments.
+"""Cluster simulators — thin configuration wrappers over the unified
+`repro.serving.runtime.ClusterRuntime` event loop (paper §5 experiments).
 
-Two drivers:
   PrefillClusterSim — TTFT vs load (Fig 6a/6b), chunk utilization & max QPS
                       (Table 1). Scheduler ∈ {sbs, immediate-rr, immediate-lt}.
   DecodeClusterSim  — KV-load balance (Fig 7) and decode throughput (Fig 8).
-                      Scheduler ∈ {sbs (IQR-lex), immediate (rr/least_*)}.
+                      Scheduler ∈ {sbs (IQR-lex), sbs-la (load-aware global
+                      allocation), immediate (rr/least_*)}.
 
-Event loop: a single heap of (time, seq, kind, payload). Engines report
-EndForward with measured pass times, closing the Algorithm-1 feedback loop —
-the adaptive interval converges online exactly as in §4.1.1.
+Engines report EndForward with measured pass times, closing the
+Algorithm-1 feedback loop — the adaptive interval converges online exactly
+as in §4.1.1.  The P/D-separated pipeline lives in repro.serving.e2e.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
 from repro.core.prefix_cache import PrefixCacheIndex
@@ -24,27 +23,16 @@ from repro.core.scheduler import (
 )
 from repro.core.state import GlobalState
 from repro.core.interval import AdaptiveIntervalController
-from repro.core.types import EndForward, Request
+from repro.core.types import Request
 from repro.serving.costmodel import CostModel
 from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
 from repro.serving.metrics import (
     DecodeReport, PrefillReport, decode_report, prefill_report,
 )
+from repro.serving.runtime import ClusterRuntime, EventLoop
 
-
-class _EventLoop:
-    def __init__(self):
-        self._heap: List[Tuple[float, int, str, object]] = []
-        self._seq = itertools.count()
-
-    def push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
-
-    def pop(self):
-        return heapq.heappop(self._heap)
-
-    def __bool__(self):
-        return bool(self._heap)
+# back-compat alias (pre-runtime callers imported the private loop)
+_EventLoop = EventLoop
 
 
 def build_state(cfg_s: ServingConfig) -> GlobalState:
@@ -63,162 +51,105 @@ def build_state(cfg_s: ServingConfig) -> GlobalState:
     )
 
 
+def build_prefill_scheduler(state: GlobalState, scfg: ServingConfig,
+                            scheduler: str) -> PrefillScheduler:
+    if scheduler == "sbs":
+        cache = None
+        if scfg.cache_aware:
+            cache = PrefixCacheIndex([d.dp_id for d in state.prefill_dps])
+        return StaggeredBatchScheduler(
+            state, n_limit=scfg.n_limit, cache_aware=scfg.cache_aware,
+            prefix_cache=cache,
+            watchdog_multiplier=scfg.watchdog_multiplier)
+    if scheduler in ("immediate-rr", "immediate-lt"):
+        pol = "round_robin" if scheduler.endswith("rr") else "least_tokens"
+        return ImmediatePrefillScheduler(state, pol)
+    raise ValueError(scheduler)
+
+
+def build_prefill_instances(state: GlobalState, scfg: ServingConfig,
+                            cost: CostModel):
+    return [SimPrefillInstance(
+                i, [d.dp_id for d in state.prefill_dps_of(i)],
+                scfg.chunk_size, cost)
+            for i in range(scfg.num_prefill_instances)]
+
+
+def build_decode_instances(state: GlobalState, scfg: ServingConfig,
+                           cost: CostModel):
+    return [SimDecodeInstance(
+                i, [d.dp_id for d in state.decode_dps_of(i)], cost)
+            for i in range(scfg.num_decode_instances)]
+
+
 class PrefillClusterSim:
+    """Prefill-only pool: one plane of the unified runtime."""
+
     def __init__(self, model_cfg: ModelConfig, serving_cfg: ServingConfig,
                  scheduler: str = "sbs", cost: Optional[CostModel] = None):
         self.cfg_s = serving_cfg
         self.cost = cost or CostModel(model_cfg)
         self.state = build_state(serving_cfg)
-        if scheduler == "sbs":
-            cache = None
-            if serving_cfg.cache_aware:
-                cache = PrefixCacheIndex(
-                    [d.dp_id for d in self.state.prefill_dps])
-            self.sched: PrefillScheduler = StaggeredBatchScheduler(
-                self.state, n_limit=serving_cfg.n_limit,
-                cache_aware=serving_cfg.cache_aware, prefix_cache=cache,
-                watchdog_multiplier=serving_cfg.watchdog_multiplier)
-        elif scheduler in ("immediate-rr", "immediate-lt"):
-            pol = "round_robin" if scheduler.endswith("rr") else "least_tokens"
-            self.sched = ImmediatePrefillScheduler(self.state, pol)
-        else:
-            raise ValueError(scheduler)
-        self.instances = [
-            SimPrefillInstance(
-                i, [d.dp_id for d in self.state.prefill_dps_of(i)],
-                serving_cfg.chunk_size, self.cost)
-            for i in range(serving_cfg.num_prefill_instances)]
-        self._pass_start: Dict[int, float] = {}
+        self.sched = build_prefill_scheduler(self.state, serving_cfg,
+                                             scheduler)
+        self.instances = build_prefill_instances(self.state, serving_cfg,
+                                                 self.cost)
+        self.runtime = ClusterRuntime(
+            self.state, prefill_sched=self.sched,
+            prefill_instances=self.instances)
 
-    # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], duration: float
             ) -> PrefillReport:
-        ev = _EventLoop()
-        for r in requests:
-            ev.push(r.arrival_time, "arrival", r)
-        now = 0.0
-        next_poll: Optional[float] = None
-        horizon = duration * 20 + 60.0    # drain guard
-
-        def schedule_poll(t: Optional[float]):
-            nonlocal next_poll
-            if t is None:
-                return
-            if next_poll is None or t < next_poll - 1e-12:
-                next_poll = t
-                ev.push(t, "poll", None)
-
-        while ev:
-            now, _, kind, payload = ev.pop()
-            if now > horizon:
-                break
-            if kind == "arrival":
-                self.sched.on_arrival(payload, now)
-            elif kind == "pass_end":
-                inst: SimPrefillInstance = payload
-                start = self._pass_start.pop(inst.instance_id)
-                res = inst.finish_pass(now)
-                for e in res.end_forwards:
-                    e.exec_time = now - start
-                    self.sched.on_end_forward(e)
-            elif kind == "poll":
-                if next_poll is not None and abs(now - next_poll) < 1e-9:
-                    next_poll = None
-            # after any event: poll scheduler, start passes
-            for cmd in self.sched.poll(now):
-                self.instances[cmd.instance_id].enqueue(cmd, now)
-            for inst in self.instances:
-                dur = inst.start_pass(now)
-                if dur is not None:
-                    self._pass_start[inst.instance_id] = now
-                    ev.push(now + dur, "pass_end", inst)
-            schedule_poll(self.sched.next_event_time(now))
-
-        util = (sum(i.tokens_processed for i in self.instances)
-                / max(sum(i.capacity_offered for i in self.instances), 1))
+        self.runtime.run(requests, duration,
+                         horizon=duration * 20 + 60.0)   # drain guard
         rejected = len(getattr(self.sched, "rejected", []))
-        return prefill_report(requests, duration, util, rejected)
+        return prefill_report(requests, duration, self.runtime.prefill_util,
+                              rejected)
 
 
 class DecodeClusterSim:
+    """Decode-only pool: arrivals are hand-offs straight into the decode
+    scheduler.  scheduler='sbs-la' selects the load-aware global
+    allocator; `watchdog_multiplier` > 0 arms the re-dispatch path."""
+
     def __init__(self, model_cfg: ModelConfig, serving_cfg: ServingConfig,
                  scheduler: str = "sbs", policy: str = "round_robin",
                  cost: Optional[CostModel] = None,
-                 snapshot_every: int = 1):
+                 snapshot_every: int = 1,
+                 watchdog_multiplier: float = 0.0):
+        if scheduler not in ("sbs", "sbs-la", "immediate"):
+            raise ValueError(scheduler)
         self.cfg_s = serving_cfg
         self.cost = cost or CostModel(model_cfg)
         self.state = build_state(serving_cfg)
-        mode = "sbs" if scheduler == "sbs" else "immediate"
+        mode = "immediate" if scheduler == "immediate" else "sbs"
+        alloc = "load_aware" if scheduler == "sbs-la" else "lex"
         self.sched = DecodeScheduler(
             self.state, mode=mode, policy=policy, iqr_k=serving_cfg.iqr_k,
-            window=serving_cfg.l_net * 10 + 0.02)
-        self.instances = [
-            SimDecodeInstance(
-                i, [d.dp_id for d in self.state.decode_dps_of(i)], self.cost)
-            for i in range(serving_cfg.num_decode_instances)]
-        self._dp2inst = {d.dp_id: d.instance_id for d in self.state.decode_dps}
-        self.kv_timeline: List[List[int]] = []
-        self.batch_timeline: List[List[int]] = []
-        self.snapshot_every = snapshot_every
+            window=serving_cfg.l_net * 10 + 0.02, alloc=alloc,
+            watchdog_multiplier=watchdog_multiplier)
+        self.instances = build_decode_instances(self.state, serving_cfg,
+                                                self.cost)
+        self.runtime = ClusterRuntime(
+            self.state, decode_sched=self.sched,
+            decode_instances=self.instances, snapshot_every=snapshot_every)
 
-    def _place(self, placements: Optional[Dict[int, List[Request]]]):
-        if not placements:
-            return
-        for dp_id, reqs in placements.items():
-            inst = self.instances[self._dp2inst[dp_id]]
-            for r in reqs:
-                inst.admit(dp_id, r)
+    @property
+    def kv_timeline(self):
+        return self.runtime.kv_timeline
+
+    @property
+    def batch_timeline(self):
+        return self.runtime.batch_timeline
 
     def run(self, requests: Sequence[Request], duration: float,
             closed_loop: int = 0) -> DecodeReport:
         """Open-loop: requests arrive by their arrival_time. Closed-loop
         (paper §5.2.2: 'average batch size 35'): hold `closed_loop`
         concurrent requests — each finish immediately admits the next."""
-        ev = _EventLoop()
-        template = list(requests)
-        if closed_loop:
-            n0 = min(len(template), closed_loop)
-            pool = iter(template[n0:])
-            for r in template[:n0]:
-                r.arrival_time = 0.0
-                ev.push(0.0, "arrival", r)
-        else:
-            pool = iter(())
-            for r in template:
-                ev.push(r.arrival_time, "arrival", r)
-        now, steps = 0.0, 0
         horizon = (duration * 20 + 60.0) if not closed_loop else duration
-        while ev:
-            now, _, kind, payload = ev.pop()
-            if now > horizon:
-                break
-            if kind == "arrival":
-                self._place(self.sched.on_handoff(payload, now))
-            elif kind == "step_end":
-                inst: SimDecodeInstance = payload
-                done = inst.finish_step(now, self.state.decode_dps)
-                if closed_loop:
-                    for _ in done:
-                        nxt = next(pool, None)
-                        if nxt is not None:
-                            nxt.arrival_time = now
-                            ev.push(now, "arrival", nxt)
-                steps += 1
-                if steps % self.snapshot_every == 0:
-                    self.kv_timeline.append(
-                        [d.kv_tokens for d in self.state.decode_dps])
-                    self.batch_timeline.append(
-                        [d.batch for d in self.state.decode_dps])
-            elif kind == "window":
-                pass
-            self._place(self.sched.poll(now))
-            for inst in self.instances:
-                dur = inst.start_step(self.state.decode_dps)
-                if dur is not None:
-                    ev.push(now + dur, "step_end", inst)
-            nxt = self.sched.next_event_time(now)
-            if nxt is not None and nxt > now:
-                ev.push(nxt, "window", None)
-        total = sum(i.tokens_generated for i in self.instances)
-        return decode_report(total, max(now, 1e-9),
-                             self.kv_timeline, self.batch_timeline)
+        end = self.runtime.run(requests, duration, horizon=horizon,
+                               closed_loop=closed_loop)
+        return decode_report(self.runtime.tokens_generated, max(end, 1e-9),
+                             self.runtime.kv_timeline,
+                             self.runtime.batch_timeline)

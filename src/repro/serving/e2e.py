@@ -1,6 +1,8 @@
 """End-to-end P/D-disaggregated cluster simulation (the paper's 3P1D
 deployment): requests flow prefill pool → KV-cache transfer (ICI/DCN) →
-decode pool, with SBS or immediate scheduling on BOTH phases.
+decode pool, with SBS or immediate scheduling on BOTH phases.  The event
+loop is the unified `repro.serving.runtime.ClusterRuntime` — this module
+only wires the two planes together and derives the report.
 
 Metrics: TTFT (arrival → first token, includes the transfer), TPOT, E2E
 latency, and goodput (requests completing within an SLO).
@@ -8,19 +10,18 @@ latency, and goodput (requests completing within an SLO).
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
-from repro.core.scheduler import (
-    DecodeScheduler, ImmediatePrefillScheduler, StaggeredBatchScheduler,
+from repro.core.scheduler import DecodeScheduler
+from repro.core.types import Request
+from repro.serving.cluster import (
+    build_decode_instances, build_prefill_instances,
+    build_prefill_scheduler, build_state,
 )
-from repro.core.types import Request, RequestPhase
-from repro.serving.cluster import _EventLoop, build_state
 from repro.serving.costmodel import CostModel, ICI_BW
-from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
 from repro.serving.metrics import mean, percentile
+from repro.serving.runtime import ClusterRuntime
 
 
 @dataclasses.dataclass
@@ -42,37 +43,40 @@ class E2EReport:
 
 
 class PDClusterSim:
-    """3P1D-style pipeline with KV transfer between the pools."""
+    """3P1D-style pipeline with KV transfer between the pools.
+
+    scheduler ∈ {sbs, sbs-la, immediate}: 'sbs-la' keeps SBS on the
+    prefill side but switches decode to Load-Aware Global Allocation."""
 
     def __init__(self, model_cfg: ModelConfig, scfg: ServingConfig,
                  scheduler: str = "sbs", cost: Optional[CostModel] = None,
-                 transfer_bw: float = ICI_BW):
+                 transfer_bw: float = ICI_BW,
+                 watchdog_multiplier: float = 0.0):
         self.cfg = model_cfg
         self.scfg = scfg
         self.cost = cost or CostModel(model_cfg)
         self.state = build_state(scfg)
         self.transfer_bw = transfer_bw
-        if scheduler == "sbs":
-            self.psched = StaggeredBatchScheduler(self.state,
-                                                  n_limit=scfg.n_limit)
-            self.dsched = DecodeScheduler(self.state, mode="sbs",
-                                          iqr_k=scfg.iqr_k)
-        else:
-            self.psched = ImmediatePrefillScheduler(self.state)
+        if scheduler in ("sbs", "sbs-la"):
+            self.psched = build_prefill_scheduler(self.state, scfg, "sbs")
+            self.dsched = DecodeScheduler(
+                self.state, mode="sbs", iqr_k=scfg.iqr_k,
+                alloc="load_aware" if scheduler == "sbs-la" else "lex",
+                watchdog_multiplier=watchdog_multiplier)
+        elif scheduler == "immediate":
+            self.psched = build_prefill_scheduler(self.state, scfg,
+                                                  "immediate-rr")
             self.dsched = DecodeScheduler(self.state, mode="immediate",
                                           policy="round_robin")
-        self.prefill = [
-            SimPrefillInstance(
-                i, [d.dp_id for d in self.state.prefill_dps_of(i)],
-                scfg.chunk_size, self.cost)
-            for i in range(scfg.num_prefill_instances)]
-        self.decode = [
-            SimDecodeInstance(
-                i, [d.dp_id for d in self.state.decode_dps_of(i)], self.cost)
-            for i in range(scfg.num_decode_instances)]
-        self._dp2dinst = {d.dp_id: d.instance_id
-                          for d in self.state.decode_dps}
-        self._pass_start: Dict[int, float] = {}
+        else:
+            raise ValueError(scheduler)
+        self.prefill = build_prefill_instances(self.state, scfg, self.cost)
+        self.decode = build_decode_instances(self.state, scfg, self.cost)
+        self.runtime = ClusterRuntime(
+            self.state, prefill_sched=self.psched,
+            prefill_instances=self.prefill, decode_sched=self.dsched,
+            decode_instances=self.decode,
+            transfer_time=self._transfer_time)
 
     def _transfer_time(self, req: Request) -> float:
         bytes_ = self.cost.kv_bytes_per_token * req.input_len
@@ -80,74 +84,16 @@ class PDClusterSim:
 
     def run(self, requests: Sequence[Request], duration: float,
             slo_e2e: float = 20.0) -> E2EReport:
-        ev = _EventLoop()
-        for r in requests:
-            ev.push(r.arrival_time, "arrival", r)
-        now = 0.0
-        horizon = duration * 30 + 120.0
-        while ev:
-            now, _, kind, payload = ev.pop()
-            if now > horizon:
-                break
-            if kind == "arrival":
-                self.psched.on_arrival(payload, now)
-            elif kind == "pass_end":
-                inst: SimPrefillInstance = payload
-                start = self._pass_start.pop(inst.instance_id)
-                res = inst.finish_pass(now)
-                for e in res.end_forwards:
-                    e.exec_time = now - start
-                    self.psched.on_end_forward(e)
-                for req in res.completed:
-                    # prefill done: ship the KV cache to the decode pool
-                    ev.push(now + self._transfer_time(req), "kv_arrived", req)
-            elif kind == "kv_arrived":
-                req: Request = payload
-                req.first_token_time = None       # TTFT set by decode
-                req.phase = RequestPhase.DECODING
-                place = self.dsched.on_handoff(req, now)
-                self._place(place)
-            elif kind == "decode_end":
-                dinst: SimDecodeInstance = payload
-                dinst.finish_step(now, self.state.decode_dps)
-            # drive both schedulers + engines
-            for cmd in self.psched.poll(now):
-                self.prefill[cmd.instance_id].enqueue(cmd, now)
-            self._place(self.dsched.poll(now))
-            for inst in self.prefill:
-                dur = inst.start_pass(now)
-                if dur is not None:
-                    self._pass_start[inst.instance_id] = now
-                    ev.push(now + dur, "pass_end", inst)
-            for dinst in self.decode:
-                dur = dinst.start_step(self.state.decode_dps)
-                if dur is not None:
-                    ev.push(now + dur, "decode_end", dinst)
-            nxt = self.psched.next_event_time(now)
-            if nxt is not None and nxt > now:
-                ev.push(nxt, "tick", None)
-            nd = self.dsched.next_event_time(now)
-            if nd is not None and nd > now:
-                ev.push(nd, "tick", None)
-
+        self.runtime.run(requests, duration,
+                         horizon=duration * 30 + 120.0)
         done = [r for r in requests if r.finish_time is not None]
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tpots = [(r.finish_time - r.first_token_time) / max(r.generated - 1, 1)
                  for r in done if r.first_token_time is not None]
         e2e = [r.finish_time - r.arrival_time for r in done]
-        util = (sum(i.tokens_processed for i in self.prefill)
-                / max(sum(i.capacity_offered for i in self.prefill), 1))
         good = sum(1 for x in e2e if x <= slo_e2e) / max(len(requests), 1)
         return E2EReport(
             n_finished=len(done),
             ttft_mean=mean(ttfts), ttft_p99=percentile(ttfts, 99),
             tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
-            prefill_util=util)
-
-    def _place(self, placements):
-        if not placements:
-            return
-        for dp_id, reqs in placements.items():
-            inst = self.decode[self._dp2dinst[dp_id]]
-            for r in reqs:
-                inst.admit(dp_id, r)
+            prefill_util=self.runtime.prefill_util)

@@ -140,12 +140,23 @@ class SimDecodeInstance:
         self.busy = False
         self.tokens_generated = 0
         self.steps = 0
+        self.epoch = 0      # bumped on drain(); invalidates in-flight steps
 
     def admit(self, dp_id: int, req: Request) -> None:
         self.running[dp_id].append(req)
 
     def has_work(self) -> bool:
         return any(self.running[d] for d in self.dp_ids)
+
+    def drain(self) -> Dict[int, List[Request]]:
+        """Watchdog re-dispatch: strip all running work off this instance
+        (it is presumed wedged) and unlock it. The caller owns releasing
+        the per-DP KV accounting and re-placing the requests."""
+        out = {d: reqs for d, reqs in self.running.items() if reqs}
+        self.running = {d: [] for d in self.dp_ids}
+        self.busy = False
+        self.epoch += 1     # any step_end still in flight is now stale
+        return out
 
     def start_step(self, dp_states) -> Optional[float]:
         if self.busy or not self.has_work():

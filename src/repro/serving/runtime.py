@@ -1,0 +1,254 @@
+"""ClusterRuntime — the single discrete-event loop behind every cluster
+topology (paper §5 experiments).
+
+Before this module the repo carried three separately implemented event
+loops (`PrefillClusterSim`, `DecodeClusterSim`, `PDClusterSim`), each with
+its own heap, poll-dedup and drain logic.  They are now thin configuration
+wrappers over one runtime with pluggable planes:
+
+  prefill plane   PrefillScheduler + SimPrefillInstance set
+  decode plane    DecodeScheduler + SimDecodeInstance set
+  handoff         optional prefill→decode coupling with a KV-transfer
+                  latency function (the P/D-separated deployment)
+
+Event kinds on the shared heap:
+  arrival      request enters the system (prefill plane, or decode plane
+               directly when there is no prefill plane)
+  pass_end     a prefill instance finished its non-preemptive pass
+  kv_arrived   a prefill-completed request's KV cache landed on the
+               decode pool (after the ICI/DCN transfer)
+  step_end     a decode instance finished one generation step
+  tick         scheduler-requested wake-up (staggered interval, decode
+               batching window, watchdog deadline)
+
+The runtime also owns the decode watchdog re-dispatch path: when the
+decode scheduler reports a stalled instance (dispatched work but no step
+completion within its watchdog budget), the instance is drained, its KV
+accounting is released, and the stranded requests are re-placed on the
+healthy instances through the scheduler's load-aware allocator.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.types import Request, RequestPhase
+from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+
+
+class EventLoop:
+    """Heap of (time, seq, kind, payload); seq breaks ties FIFO."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def pop(self):
+        return heapq.heappop(self._heap)
+
+    def __bool__(self):
+        return bool(self._heap)
+
+
+class ClusterRuntime:
+    def __init__(
+        self,
+        state,
+        *,
+        prefill_sched=None,
+        prefill_instances: Optional[Sequence[SimPrefillInstance]] = None,
+        decode_sched=None,
+        decode_instances: Optional[Sequence[SimDecodeInstance]] = None,
+        transfer_time=None,            # callable(Request) -> seconds
+        snapshot_every: int = 0,
+    ):
+        if prefill_sched is None and decode_sched is None:
+            raise ValueError("runtime needs at least one plane")
+        self.state = state
+        self.psched = prefill_sched
+        self.prefill = list(prefill_instances or [])
+        self.dsched = decode_sched
+        self.decode = list(decode_instances or [])
+        self.transfer_time = transfer_time
+        self.snapshot_every = snapshot_every
+        self._dp2dinst = {d.dp_id: d.instance_id
+                          for d in state.decode_dps} if self.decode else {}
+        self._pass_start: Dict[int, float] = {}
+        self._next_tick: Optional[float] = None
+        # decode observability (Fig 7/8 timelines)
+        self.kv_timeline: List[List[int]] = []
+        self.batch_timeline: List[List[int]] = []
+        self.redispatched: List[Request] = []
+        self._steps = 0
+
+    # -- helpers -----------------------------------------------------------
+
+    def _schedule_tick(self, ev: EventLoop, t: Optional[float],
+                       now: float):
+        """Dedup: keep only the earliest pending tick; later wake-ups are
+        re-derived from next_event_time() once that tick fires.  A tick at
+        (or before) `now` is dropped — the drive section already polled at
+        `now`, so re-ticking the same instant cannot make progress and
+        would livelock the loop."""
+        if t is None or t <= now + 1e-12:
+            return
+        if self._next_tick is None or t < self._next_tick - 1e-12:
+            self._next_tick = t
+            ev.push(t, "tick", None)
+
+    def _place(self, placements: Optional[Dict[int, List[Request]]],
+               now: float):
+        if not placements:
+            return
+        for dp_id, reqs in placements.items():
+            inst = self.decode[self._dp2dinst[dp_id]]
+            for r in reqs:
+                inst.admit(dp_id, r)
+        if self.dsched is not None and hasattr(self.dsched, "on_placed"):
+            self.dsched.on_placed(placements, now)
+
+    def _handoff(self, req: Request, now: float):
+        """Request enters the decode plane (fresh arrival or KV arrival)."""
+        if self.psched is not None:
+            req.first_token_time = None      # true TTFT is set by decode
+        req.phase = RequestPhase.DECODING
+        self._place(self.dsched.on_handoff(req, now), now)
+
+    def _snapshot(self):
+        if self.snapshot_every and self._steps % self.snapshot_every == 0:
+            self.kv_timeline.append(
+                [d.kv_tokens for d in self.state.decode_dps])
+            self.batch_timeline.append(
+                [d.batch for d in self.state.decode_dps])
+
+    def _redispatch_stalled(self, now: float):
+        """Watchdog path: pull stranded work off wedged decode instances
+        and re-place it on healthy ones."""
+        if self.dsched is None or not hasattr(self.dsched,
+                                              "stalled_instances"):
+            return None
+        stalled = self.dsched.stalled_instances(now)
+        if not stalled:
+            return None
+        by_id = {d.dp_id: d for d in self.state.decode_dps}
+        orphans: List[Request] = []
+        for iid in stalled:
+            drained = self.decode[iid].drain()
+            for dp_id, reqs in drained.items():
+                st = by_id[dp_id]
+                for r in reqs:
+                    st.release(r.input_len + r.generated)
+                    r.assigned_dp = None
+                    r.migrations += 1
+                    orphans.append(r)
+        if orphans:
+            self.redispatched.extend(orphans)
+            return self.dsched.place_redispatch(orphans, now)
+        return None
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], duration: float, *,
+            horizon: Optional[float] = None, closed_loop: int = 0) -> float:
+        """Drive all planes until the heap drains or `horizon` passes.
+        Returns the final simulation clock.  `closed_loop` (decode-only
+        mode) holds that many concurrent requests: each finish admits the
+        next from the template list (paper §5.2.2)."""
+        ev = EventLoop()
+        self._next_tick = None
+        template = list(requests)
+        pool: Iterator[Request] = iter(())
+        if closed_loop:
+            n0 = min(len(template), closed_loop)
+            pool = iter(template[n0:])
+            for r in template[:n0]:
+                r.arrival_time = 0.0
+                ev.push(0.0, "arrival", r)
+        else:
+            for r in template:
+                ev.push(r.arrival_time, "arrival", r)
+        now = 0.0
+        if horizon is None:
+            horizon = duration * 20 + 60.0
+        while ev:
+            now, _, kind, payload = ev.pop()
+            if now > horizon:
+                break
+            if kind == "arrival":
+                if self.psched is not None:
+                    self.psched.on_arrival(payload, now)
+                else:
+                    self._handoff(payload, now)
+            elif kind == "pass_end":
+                inst: SimPrefillInstance = payload
+                start = self._pass_start.pop(inst.instance_id)
+                res = inst.finish_pass(now)
+                for e in res.end_forwards:
+                    e.exec_time = now - start
+                    self.psched.on_end_forward(e)
+                if self.dsched is not None:
+                    for req in res.completed:
+                        delay = (self.transfer_time(req)
+                                 if self.transfer_time else 0.0)
+                        ev.push(now + delay, "kv_arrived", req)
+            elif kind == "kv_arrived":
+                self._handoff(payload, now)
+            elif kind == "step_end":
+                dinst, epoch, step_dur = payload
+                if epoch != dinst.epoch:
+                    pass        # stale: the instance was drained mid-step
+                else:
+                    done = dinst.finish_step(now, self.state.decode_dps)
+                    if self.dsched is not None and hasattr(self.dsched,
+                                                           "on_step_end"):
+                        self.dsched.on_step_end(dinst.instance_id, now,
+                                                step_time=step_dur)
+                    if closed_loop:
+                        for _ in done:
+                            nxt = next(pool, None)
+                            if nxt is not None:
+                                nxt.arrival_time = now
+                                ev.push(now, "arrival", nxt)
+                    self._steps += 1
+                    self._snapshot()
+            elif kind == "tick":
+                if (self._next_tick is not None
+                        and now >= self._next_tick - 1e-9):
+                    self._next_tick = None
+            # drive every plane after any event ----------------------------
+            if self.psched is not None:
+                for cmd in self.psched.poll(now):
+                    self.prefill[cmd.instance_id].enqueue(cmd, now)
+                for inst in self.prefill:
+                    dur = inst.start_pass(now)
+                    if dur is not None:
+                        self._pass_start[inst.instance_id] = now
+                        ev.push(now + dur, "pass_end", inst)
+            if self.dsched is not None:
+                self._place(self.dsched.poll(now), now)
+                self._place(self._redispatch_stalled(now), now)
+                for dinst in self.decode:
+                    dur = dinst.start_step(self.state.decode_dps)
+                    if dur is not None:
+                        ev.push(now + dur, "step_end",
+                                (dinst, dinst.epoch, dur))
+            # wake-ups -----------------------------------------------------
+            for sched in (self.psched, self.dsched):
+                if sched is not None:
+                    self._schedule_tick(ev, sched.next_event_time(now), now)
+        return now
+
+    # -- aggregate stats ---------------------------------------------------
+
+    @property
+    def prefill_util(self) -> float:
+        return (sum(i.tokens_processed for i in self.prefill)
+                / max(sum(i.capacity_offered for i in self.prefill), 1))
+
+    @property
+    def tokens_generated(self) -> int:
+        return sum(i.tokens_generated for i in self.decode)

@@ -1,10 +1,17 @@
 """Synthetic workloads matching the paper's §5 evaluation traffic.
 
-- short:  input lengths 0–3K tokens, mean ≈ 1K   (Fig 6a; Chunk 3K)
-- long:   input lengths 3K–64K tokens, mean ≈ 6.7K (Fig 6b; Chunk 16K)
-- decode: combined in+out ≈ 2.5K tokens, avg batch 35 (Fig 7/8)
+- short:      input lengths 0–3K tokens, mean ≈ 1K   (Fig 6a; Chunk 3K)
+- long:       input lengths 3K–64K tokens, mean ≈ 6.7K (Fig 6b; Chunk 16K)
+- decode:     combined in+out ≈ 2.5K tokens, avg batch 35 (Fig 7/8)
+- bursty:     short lengths under a Markov-modulated Poisson process —
+              on/off arrival bursts with the same long-run rate (flash
+              crowds; stresses the staggered clock and flow control)
+- heavy_tail: long-context heavy-tail (lognormal σ=1.6, up to 128K) —
+              a few huge documents amid chat traffic (stresses chunking
+              and KV-load balance)
 
-Arrivals are Poisson (the M in the paper's M/D/S analysis).
+Arrivals are Poisson (the M in the paper's M/D/S analysis); bursty
+workloads modulate the rate between a high and a low state.
 """
 from __future__ import annotations
 
@@ -24,13 +31,21 @@ class WorkloadSpec:
     mean_len: float
     out_mean: int = 200
     sigma: float = 0.8            # lognormal shape (tail heaviness)
+    # arrival-process modulation (1.0 => plain Poisson)
+    burst_factor: float = 1.0     # peak rate = burst_factor × mean rate
+    burst_duty: float = 0.3       # fraction of each cycle at peak rate
+    burst_period: float = 2.0     # seconds per on/off cycle
 
 
 SHORT = WorkloadSpec("short", 16, 3000, 1000.0)
 LONG = WorkloadSpec("long", 3000, 64000, 6700.0)
 DECODE = WorkloadSpec("decode", 512, 4096, 2000.0, out_mean=500)
+BURSTY = WorkloadSpec("bursty", 16, 3000, 1000.0,
+                      burst_factor=3.0, burst_duty=0.25, burst_period=2.0)
+HEAVY_TAIL = WorkloadSpec("heavy_tail", 64, 131072, 2500.0, sigma=1.6)
 
-SPECS = {"short": SHORT, "long": LONG, "decode": DECODE}
+SPECS = {"short": SHORT, "long": LONG, "decode": DECODE,
+         "bursty": BURSTY, "heavy_tail": HEAVY_TAIL}
 
 
 def _lognormal_params(spec: WorkloadSpec) -> tuple:
@@ -52,6 +67,46 @@ def sample_output_len(spec: WorkloadSpec, rng: random.Random) -> int:
     return max(1, int(rng.expovariate(1.0 / spec.out_mean)))
 
 
+def arrival_times(spec: WorkloadSpec, qps: float, duration: float,
+                  rng: random.Random) -> Iterator[float]:
+    """Arrival process: plain Poisson, or a two-state Markov-modulated
+    Poisson process when burst_factor > 1.  The long-run average rate is
+    `qps` in both cases: the peak state runs at burst_factor×qps for
+    burst_duty of each period, the quiet state absorbs the remainder."""
+    if spec.burst_factor <= 1.0:
+        t = 0.0
+        while True:
+            t += rng.expovariate(qps)
+            if t >= duration:
+                return
+            yield t
+        return
+    duty, period, bf = spec.burst_duty, spec.burst_period, spec.burst_factor
+    if bf * duty > 1.0:
+        raise ValueError(
+            f"burst_factor·burst_duty = {bf * duty:.2f} > 1: the quiet "
+            f"state cannot absorb the burst, so the long-run rate would "
+            f"exceed qps")
+    hi = bf * qps
+    lo = qps * (1.0 - duty * bf) / max(1.0 - duty, 1e-9)
+    t = 0.0
+    while t < duration:
+        cycle0 = math.floor(t / period) * period
+        in_burst = (t - cycle0) < duty * period
+        seg_end = cycle0 + (duty * period if in_burst else period)
+        rate = hi if in_burst else lo
+        if rate <= 0.0:
+            t = seg_end
+            continue
+        t += rng.expovariate(rate)
+        if t < seg_end:
+            if t >= duration:
+                return
+            yield t
+        else:
+            t = seg_end
+
+
 def generate(
     spec: WorkloadSpec,
     qps: float,
@@ -61,18 +116,14 @@ def generate(
     shared_prefix_prob: float = 0.0,
     vocab: int = 50000,
 ) -> List[Request]:
-    """Poisson arrivals over [0, duration). Optionally attach token ids with
-    shared prefixes (for cache-aware scheduling experiments)."""
+    """Arrivals over [0, duration) per the spec's process. Optionally attach
+    token ids with shared prefixes (for cache-aware scheduling)."""
     rng = random.Random(seed)
     reqs: List[Request] = []
-    t = 0.0
     rid = 0
     prefixes = [tuple(rng.randrange(vocab) for _ in range(256))
                 for _ in range(4)]
-    while True:
-        t += rng.expovariate(qps)
-        if t >= duration:
-            break
+    for t in arrival_times(spec, qps, duration, rng):
         L = sample_length(spec, rng)
         tokens = None
         if with_tokens:

@@ -1,0 +1,110 @@
+"""Property-testing compatibility layer.
+
+`hypothesis` is not installable in the offline CI environment, so every
+test module imports `given / settings / st` from here instead.  When the
+real library is available it is used unchanged (shrinking, the database,
+health checks — everything).  Otherwise a small deterministic fallback
+drives each property with seeded pseudo-random examples: the same
+properties are checked, example generation is reproducible run-to-run,
+and a failing example's kwargs are attached to the assertion message.
+
+Only the strategy surface the suite actually uses is implemented:
+    st.integers(lo, hi)   st.floats(lo, hi)   st.booleans()
+    st.sampled_from(seq)  st.lists(elem, min_size=, max_size=)
+    st.tuples(*elems)     st.just(v)          strategy.map(f)
+"""
+from __future__ import annotations
+
+try:                                          # pragma: no cover
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _St:
+        """Mini `hypothesis.strategies` namespace."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        """Store the run budget on the function for `given` to pick up."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        """Deterministic replay: the RNG is seeded from the test name, so
+        every run (and every CI machine) sees the same example stream."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    drawn = {k: s.example(rng)
+                             for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"property failed on example #{i}: {drawn!r}"
+                        ) from e
+            # hide the drawn parameters from pytest's fixture resolution:
+            # only non-strategy params (fixtures like monkeypatch) remain
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

@@ -1,7 +1,58 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: deliberately NO --xla_force_host_platform_device_count here — tests
 # and benches must see the real (1-device) platform; only launch/dryrun.py
 # forces 512 host devices (in its own process).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, _HERE)           # sibling imports (_hypothesis_shim)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavyweight model/jit cases (deselect with "
+        "-m 'not slow' for the fast tier-1 loop)")
+
+
+# ---------------------------------------------------------------------------
+# Shared, session-scoped model setup. get_arch() is cheap but init_params +
+# the first jitted forward of each (arch, shape) pair dominates the suite's
+# runtime — cache them once per session instead of once per test.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def model_setup():
+    """(arch, B, S, key) -> (cfg, params, tokens, embeds, full_logits, npre),
+    memoized for the whole session."""
+    import jax
+    import jax.numpy as jnp
+    from repro.config import get_arch
+    from repro.models import init_params
+    from repro.models.model import forward_full, logits_from_hidden
+
+    cache = {}
+
+    def get(arch, B=2, S=16, key=0):
+        k = (arch, B, S, key)
+        if k in cache:
+            return cache[k]
+        cfg = get_arch(arch, reduced=True)
+        params = init_params(cfg, jax.random.PRNGKey(key))
+        ks = jax.random.split(jax.random.PRNGKey(key + 1), 2)
+        tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+        embeds = None
+        if cfg.is_encoder_decoder:
+            embeds = jax.random.normal(
+                ks[1], (B, cfg.encoder_seq_len, cfg.d_model)) * 0.1
+        elif cfg.num_patch_tokens:
+            embeds = jax.random.normal(
+                ks[1], (B, cfg.num_patch_tokens, cfg.d_model)) * 0.1
+        x, _, _, _ = forward_full(cfg, params, tokens, embeds=embeds)
+        full_logits = logits_from_hidden(cfg, params, x)
+        npre = x.shape[1] - S
+        cache[k] = (cfg, params, tokens, embeds, full_logits, npre)
+        return cache[k]
+    return get

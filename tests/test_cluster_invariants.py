@@ -1,7 +1,7 @@
 """System-level invariants of the cluster simulator (hypothesis-driven):
 request conservation, metric bounds, FCFS-ish fairness under SBS."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.config import ServingConfig, get_arch
 from repro.core.types import RequestPhase

@@ -1,6 +1,6 @@
 """Algorithm 3 — IQR-aware lexicographical decode scheduling."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.decode_alloc import (
     iqr_safe_set, lex_compare, percentile, schedule_decode_batch,

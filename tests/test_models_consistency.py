@@ -18,28 +18,11 @@ ARCHS = list_archs()
 TOL = 2e-3
 
 
-def _setup(arch, B=2, S=16, key=0):
-    cfg = get_arch(arch, reduced=True)
-    params = init_params(cfg, jax.random.PRNGKey(key))
-    ks = jax.random.split(jax.random.PRNGKey(key + 1), 2)
-    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
-    embeds = None
-    if cfg.is_encoder_decoder:
-        embeds = jax.random.normal(
-            ks[1], (B, cfg.encoder_seq_len, cfg.d_model)) * 0.1
-    elif cfg.num_patch_tokens:
-        embeds = jax.random.normal(
-            ks[1], (B, cfg.num_patch_tokens, cfg.d_model)) * 0.1
-    x, _, _, _ = forward_full(cfg, params, tokens, embeds=embeds)
-    full_logits = logits_from_hidden(cfg, params, x)
-    npre = x.shape[1] - S
-    return cfg, params, tokens, embeds, full_logits, npre
-
-
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
-def test_prefill_then_decode_matches_full(arch):
+def test_prefill_then_decode_matches_full(arch, model_setup):
     B, S, S0 = 2, 16, 10
-    cfg, params, tokens, embeds, full, npre = _setup(arch, B, S)
+    cfg, params, tokens, embeds, full, npre = model_setup(arch, B, S)
     lg, cache = prefill(cfg, params, tokens[:, :S0], embeds=embeds,
                         max_len=S + npre + 4)
     errs = [np.abs(np.asarray(lg - full[:, npre + S0 - 1])).max()]
@@ -49,12 +32,17 @@ def test_prefill_then_decode_matches_full(arch):
     assert max(errs) < TOL
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if not get_arch(a, True).is_encoder_decoder])
-def test_chunked_prefill_matches_full(arch):
-    """True chunked prefill (the paper's C_chunk unit) with KV continuation."""
-    B, S, C = 2, 24, 8
-    cfg, params, tokens, embeds, full, npre = _setup(arch, B, S)
+def test_chunked_prefill_matches_full(arch, model_setup):
+    """True chunked prefill (the paper's C_chunk unit) with KV continuation.
+    S=16 matches test_prefill_then_decode_matches_full so the session-scoped
+    model_setup cache is shared (one init+forward per arch, not two); C=4
+    keeps ≥3 chunks so middle chunks (prior KV AND a later continuation)
+    stay covered."""
+    B, S, C = 2, 16, 4
+    cfg, params, tokens, embeds, full, npre = model_setup(arch, B, S)
     if cfg.num_patch_tokens:
         lg, cache = prefill(cfg, params, tokens[:, :C], embeds=embeds,
                             max_len=64)

@@ -1,6 +1,6 @@
 """Algorithm 2 — Prioritized Batch Allocation (water-filling bin packing)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.prefill_alloc import chunk_utilization, greedy_dispatch, pbaa
 from repro.core.prefix_cache import PrefixCacheIndex

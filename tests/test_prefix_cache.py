@@ -1,5 +1,5 @@
 """Radix-tree prefix cache (cache-aware PBAA support)."""
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.prefix_cache import PrefixCacheIndex, RadixTree
 

@@ -1,0 +1,341 @@
+"""Invariants of the unified ClusterRuntime event loop, the load-aware
+decode allocator, and the watchdog re-dispatch path."""
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.config import ServingConfig, get_arch
+from repro.core.decode_alloc import schedule_decode_global
+from repro.core.scheduler import DecodeScheduler
+from repro.core.types import DecodeDPState, Request
+from repro.serving.cluster import (
+    DecodeClusterSim, PrefillClusterSim, build_state,
+)
+from repro.serving.e2e import PDClusterSim
+from repro.serving.engine import SimDecodeInstance
+from repro.serving.runtime import ClusterRuntime
+from repro.serving.workload import (
+    BURSTY, HEAVY_TAIL, WorkloadSpec, generate,
+)
+
+CFG = get_arch("deepseek-7b")
+
+
+def _pd_cfg():
+    return ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=4,
+                         num_decode_instances=2, decode_dp_per_instance=4,
+                         chunk_size=2048, t_default=0.3,
+                         max_batch_per_dp=64, kv_budget_tokens=400_000)
+
+
+# ---------------------------------------------------------------------------
+# One runtime behind every simulator
+# ---------------------------------------------------------------------------
+
+def test_all_three_sims_delegate_to_cluster_runtime():
+    scfg = _pd_cfg()
+    p = PrefillClusterSim(CFG, scfg)
+    d = DecodeClusterSim(CFG, scfg)
+    e = PDClusterSim(CFG, scfg)
+    assert isinstance(p.runtime, ClusterRuntime)
+    assert isinstance(d.runtime, ClusterRuntime)
+    assert isinstance(e.runtime, ClusterRuntime)
+    # no duplicated event-loop machinery left in the wrappers
+    import repro.serving.cluster as cluster_mod
+    import repro.serving.e2e as e2e_mod
+    assert not hasattr(cluster_mod, "heapq")
+    assert not hasattr(e2e_mod, "heapq")
+
+
+def test_pd_pipeline_conserves_requests_exactly_once():
+    """Every arrived request finishes exactly once — finish_time set,
+    generated == output_len, and token accounting is additive."""
+    spec = WorkloadSpec("w", 64, 2000, 700.0, out_mean=20)
+    reqs = generate(spec, qps=20, duration=5, seed=3)
+    sim = PDClusterSim(CFG, _pd_cfg(), scheduler="sbs")
+    sim.run(reqs, 5, slo_e2e=60.0)
+    assert all(r.finish_time is not None for r in reqs)
+    for r in reqs:
+        assert r.generated == r.output_len          # exactly-once decode
+        assert r.first_token_time is not None
+        assert r.arrival_time <= r.first_token_time <= r.finish_time
+    total = sum(i.tokens_generated for i in sim.decode)
+    assert total == sum(r.output_len for r in reqs)
+
+
+def test_no_dispatch_to_non_quiescent_instance(monkeypatch):
+    """With feedback flowing (no lost signals), SBS never enqueues work on
+    an engine that is mid-pass — quiescence gating holds end-to-end."""
+    from repro.serving.engine import SimPrefillInstance
+    violations = []
+    orig = SimPrefillInstance.enqueue
+
+    def checked(self, cmd, now):
+        if self.busy:
+            violations.append((self.instance_id, now))
+        return orig(self, cmd, now)
+
+    monkeypatch.setattr(SimPrefillInstance, "enqueue", checked)
+    scfg = ServingConfig(num_prefill_instances=3, prefill_dp_per_instance=2,
+                         chunk_size=2048, t_default=0.2, n_limit=10 ** 6)
+    reqs = generate(WorkloadSpec("w", 64, 2000, 700.0), qps=40, duration=5,
+                    seed=4)
+    PrefillClusterSim(CFG, scfg, scheduler="sbs").run(reqs, 5)
+    assert not violations
+
+
+def test_decode_only_runtime_matches_closed_loop_semantics():
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=4,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    spec = WorkloadSpec("d", 64, 2048, 800.0, out_mean=20)
+    reqs = generate(spec, qps=2000, duration=1, seed=5)[:200]
+    sim = DecodeClusterSim(CFG, scfg, scheduler="sbs-la")
+    rep = sim.run(reqs, 60, closed_loop=32)
+    assert rep.tokens_generated == sum(r.generated for r in reqs)
+    for r in reqs:
+        if r.finish_time is not None:
+            assert r.generated == r.output_len
+
+
+# ---------------------------------------------------------------------------
+# Load-Aware Global Allocation
+# ---------------------------------------------------------------------------
+
+def mk_units(n_inst, per_inst, kv=0):
+    units = []
+    for i in range(n_inst):
+        for j in range(per_inst):
+            units.append(DecodeDPState(dp_id=i * per_inst + j,
+                                       instance_id=i, kv_tokens=kv))
+    return units
+
+
+def mk_req(rid, in_len, out_len=10):
+    return Request(rid=rid, arrival_time=0.0, input_len=in_len,
+                   output_len=out_len)
+
+
+@given(
+    lens=st.lists(st.integers(1, 20_000), min_size=1, max_size=64),
+    n_inst=st.integers(1, 4),
+    per_inst=st.integers(1, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_load_aware_greedy_balance_bound(lens, n_inst, per_inst):
+    """From an empty pool, greedy least-KV placement keeps the per-DP
+    KV spread within the largest single placement (list-scheduling
+    bound), and every request lands exactly once."""
+    units = mk_units(n_inst, per_inst)
+    reqs = [mk_req(i, l) for i, l in enumerate(lens)]
+    out = schedule_decode_global(reqs, units)
+    assigned = sorted(r.rid for v in out.values() for r in v)
+    assert assigned == sorted(r.rid for r in reqs)
+    assert sum(u.kv_tokens for u in units) == sum(lens)
+    assert sum(u.batch for u in units) == len(lens)
+    spread = max(u.kv_tokens for u in units) - min(
+        u.kv_tokens for u in units)
+    assert spread <= max(r.input_len + r.generated for r in reqs)
+
+
+def test_load_aware_balances_across_instances():
+    """A pre-loaded hot instance sheds new traffic to its cold peer."""
+    units = mk_units(2, 4, kv=0)
+    for u in units:
+        if u.instance_id == 0:
+            u.kv_tokens = 50_000                 # instance 0 is hot
+    out = schedule_decode_global([mk_req(i, 1000) for i in range(8)], units)
+    placed_inst = {u.instance_id for u in units
+                   for dp in out if dp == u.dp_id}
+    assert placed_inst == {1}
+
+
+def test_load_aware_respects_exclusion_with_fallback():
+    units = mk_units(2, 2)
+    out = schedule_decode_global([mk_req(0, 100)], units,
+                                 exclude_instances=frozenset({0}))
+    assert all(units[dp].instance_id == 1 for dp in out)
+    # excluding everything must not drop work
+    out2 = schedule_decode_global([mk_req(1, 100)], units,
+                                  exclude_instances=frozenset({0, 1}))
+    assert sum(len(v) for v in out2.values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Watchdog re-dispatch
+# ---------------------------------------------------------------------------
+
+def test_watchdog_redispatches_off_stalled_instance():
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    state = build_state(scfg)
+    sched = DecodeScheduler(state, mode="sbs", alloc="load_aware",
+                            watchdog_multiplier=5.0)
+    from repro.serving.costmodel import CostModel
+    cost = CostModel(CFG)
+    insts = [SimDecodeInstance(i, [d.dp_id for d in state.decode_dps_of(i)],
+                               cost) for i in range(2)]
+    rt = ClusterRuntime(state, decode_sched=sched, decode_instances=insts)
+    # hand two requests to the scheduler and place them (lands on inst 0+1)
+    for i in range(4):
+        sched.on_handoff(mk_req(i, 1000), 0.0)
+    rt._place(sched.poll(0.0), 0.0)
+    assert insts[0].has_work() and insts[1].has_work()
+    # instance 1 keeps stepping (healthy); instance 0 never reports.
+    # the observed step time arms the watchdog budget
+    sched.on_step_end(1, 0.05, step_time=0.05)
+    kv_before = sum(d.kv_tokens for d in state.decode_dps)
+    late = 10.0                       # way past 5 × step estimate
+    placements = rt._redispatch_stalled(late)
+    rt._place(placements, late)
+    assert 0 in sched.quarantined
+    assert not insts[0].has_work()    # drained
+    assert insts[1].has_work()
+    # every request still lives somewhere, KV accounting conserved
+    n_running = sum(len(v) for v in insts[1].running.values())
+    assert n_running == 4
+    migrated = [r for v in insts[1].running.values() for r in v
+                if r.migrations == 1]
+    assert len(migrated) == 2         # exactly the two evicted requests
+    assert sum(d.kv_tokens for d in state.decode_dps) == kv_before
+    assert all(d.kv_tokens == 0 for d in state.decode_dps
+               if d.instance_id == 0)
+    # a healthy step un-quarantines the instance
+    sched.on_step_end(0, late + 0.1)
+    assert 0 not in sched.quarantined
+
+
+def test_live_watchdog_run_terminates_and_conserves():
+    """An armed watchdog driven through the real event loop must neither
+    crash on stale step_end events nor livelock, even with an absurdly
+    aggressive budget that preempts in-flight steps (such a budget cannot
+    guarantee progress for every request — but no request may vanish)."""
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    spec = WorkloadSpec("d", 64, 1024, 400.0, out_mean=4)
+    reqs = generate(spec, qps=200, duration=0.5, seed=5)[:40]
+    sim = DecodeClusterSim(CFG, scfg, scheduler="sbs-la",
+                           watchdog_multiplier=0.5)
+    sim.run(reqs, 0.5)
+    # the aggressive budget really did exercise the re-dispatch path
+    assert sum(r.migrations for r in reqs) > 0
+    resident = [r for inst in sim.instances
+                for v in inst.running.values() for r in v]
+    for r in reqs:
+        if r.finish_time is not None:
+            assert r.generated == r.output_len    # exactly-once completion
+        else:                                     # still resident, not lost
+            assert r in resident or r in sim.sched.buffer
+    # conservation: live KV accounting matches the resident requests
+    live_kv = sum(d.kv_tokens for d in sim.state.decode_dps)
+    assert live_kv == sum(r.input_len + r.generated for r in resident)
+
+
+def test_live_watchdog_sane_budget_no_spurious_migrations():
+    """With the paper's 5× budget and healthy instances, the watchdog
+    must never preempt legitimate in-flight steps."""
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    spec = WorkloadSpec("d", 64, 1024, 400.0, out_mean=5)
+    reqs = generate(spec, qps=200, duration=0.5, seed=6)[:40]
+    sim = DecodeClusterSim(CFG, scfg, scheduler="sbs-la",
+                           watchdog_multiplier=5.0)
+    sim.run(reqs, 2)
+    assert all(r.finish_time is not None for r in reqs)
+    assert sum(r.migrations for r in reqs) == 0
+
+
+def test_load_aware_instance_load_counts_masked_units():
+    """A hot instance whose saturated DPs are IQR/budget-masked must not
+    look cold at level 1 — masked units still pace its sync barrier."""
+    units = [DecodeDPState(dp_id=j, instance_id=0, kv_tokens=200_000,
+                           kv_budget=150_000) for j in range(3)]
+    units.append(DecodeDPState(dp_id=3, instance_id=0, kv_tokens=0))
+    units += [DecodeDPState(dp_id=4 + j, instance_id=1, kv_tokens=10_000)
+              for j in range(4)]
+    out = schedule_decode_global([mk_req(0, 100)], units)
+    (dp,) = out
+    assert units[dp].instance_id == 1
+
+
+def test_quarantine_lifts_after_probation():
+    """A drained instance receives no work and so can never step itself
+    healthy — probation must re-admit it after one further budget."""
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    state = build_state(scfg)
+    sched = DecodeScheduler(state, mode="sbs", alloc="load_aware",
+                            watchdog_multiplier=5.0)
+    sched.on_step_end(1, 0.05, step_time=0.05)     # arm the budget
+    sched.on_placed({0: [mk_req(0, 100)]}, 0.1)
+    assert sched.stalled_instances(10.0) == [0]
+    assert 0 in sched.quarantined
+    # before probation expires the instance stays excluded
+    assert sched.stalled_instances(10.1) == []
+    assert 0 in sched.quarantined
+    # one further budget later it is re-admitted for probing
+    sched.stalled_instances(10.0 + 5 * 0.05 + 1e-6)
+    assert 0 not in sched.quarantined
+
+
+def test_watchdog_unarmed_until_first_real_step():
+    """Cold start: the default step estimate must not trip the watchdog
+    before any real step time has been observed."""
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    state = build_state(scfg)
+    sched = DecodeScheduler(state, mode="sbs", alloc="load_aware",
+                            watchdog_multiplier=5.0)
+    sched.on_placed({0: [mk_req(0, 100)]}, 0.0)
+    assert sched.stalled_instances(100.0) == []    # not armed yet
+    sched.on_step_end(1, 0.5, step_time=0.5)       # first real sample
+    assert sched.stalled_instances(100.0) == [0]
+
+
+def test_stalled_instance_receives_no_new_work():
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=2,
+                         max_batch_per_dp=64, kv_budget_tokens=10 ** 9)
+    state = build_state(scfg)
+    sched = DecodeScheduler(state, mode="sbs", alloc="load_aware",
+                            watchdog_multiplier=5.0)
+    sched.quarantined.add(0)
+    out = sched._allocate([mk_req(i, 100) for i in range(6)])
+    dp2inst = {d.dp_id: d.instance_id for d in state.decode_dps}
+    assert all(dp2inst[dp] == 1 for dp in out)
+
+
+# ---------------------------------------------------------------------------
+# Workload scenarios
+# ---------------------------------------------------------------------------
+
+def test_bursty_long_run_rate_matches_qps():
+    reqs = generate(BURSTY, qps=50, duration=40, seed=9)
+    rate = len(reqs) / 40
+    assert 40 < rate < 60                   # long-run average preserved
+    # and the process is actually bursty: peak-second rate >> mean rate
+    per_sec = [0] * 40
+    for r in reqs:
+        per_sec[int(r.arrival_time)] += 1
+    assert max(per_sec) > 1.8 * rate
+
+
+def test_heavy_tail_has_heavy_tail():
+    reqs = generate(HEAVY_TAIL, qps=200, duration=20, seed=10)
+    lens = sorted(r.input_len for r in reqs)
+    p50 = lens[len(lens) // 2]
+    p99 = lens[int(len(lens) * 0.99)]
+    assert p99 > 8 * p50                    # long-context outliers exist
+    assert max(lens) <= HEAVY_TAIL.max_len
+    assert min(lens) >= HEAVY_TAIL.min_len
+
+
+def test_bursty_overcommitted_config_rejected():
+    bad = WorkloadSpec("b", 16, 100, 50.0, burst_factor=5.0, burst_duty=0.3)
+    with pytest.raises(ValueError):
+        generate(bad, qps=10, duration=1, seed=0)
+
+
+def test_workloads_deterministic_by_seed():
+    a = generate(BURSTY, qps=30, duration=5, seed=1)
+    b = generate(BURSTY, qps=30, duration=5, seed=1)
+    assert [(r.arrival_time, r.input_len) for r in a] == \
+        [(r.arrival_time, r.input_len) for r in b]
