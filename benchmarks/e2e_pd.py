@@ -1,10 +1,17 @@
 """End-to-end P/D-disaggregated pipeline (3P1D): SBS on both phases vs
-immediate dispatch — TTFT, TPOT, and goodput including the KV transfer —
-under three traffic scenarios: steady Poisson, bursty (MMPP flash
-crowds), and long-context heavy-tail."""
+immediate dispatch — TTFT, TPOT, throughput and goodput including the KV
+transfer — under three traffic scenarios: steady Poisson, bursty (MMPP
+flash crowds), and long-context heavy-tail.
+
+Besides the human-readable table, the run leaves its results in
+``JSON_PAYLOAD`` (scenario -> qps -> scheduler -> metrics); the driver's
+``--json`` flag serialises it to ``BENCH_e2e.json`` for cross-PR perf
+tracking.  ``quick=True`` (CI smoke) shrinks the sweep to one load point
+and a shorter horizon per scenario.
+"""
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Optional
 
 from repro.config import ServingConfig, get_arch
 from repro.serving.e2e import PDClusterSim
@@ -24,29 +31,40 @@ SCENARIOS = (
     ("heavy_tail", HEAVY, (20, 35)),
 )
 
+JSON_PAYLOAD: Optional[Dict] = None
 
-def main(report) -> List[str]:
+
+def main(report, quick: bool = False) -> List[str]:
+    global JSON_PAYLOAD
     rows: List[str] = []
+    payload: Dict = {}
     cfg = get_arch(ARCH)
     scfg = ServingConfig(num_prefill_instances=3, prefill_dp_per_instance=8,
                          num_decode_instances=1, decode_dp_per_instance=32,
                          chunk_size=3072, t_default=0.5,
                          max_batch_per_dp=64, kv_budget_tokens=400_000)
+    duration = 5 if quick else 15
     report("\n## E2E 3P1D pipeline (prefill pool → KV transfer → decode pool)")
     for scen, spec, qpss in SCENARIOS:
+        if quick:
+            qpss = qpss[:1]
         report(f"### scenario: {scen}")
         report(f"{'scheduler':>12} {'qps':>5}  result")
+        payload[scen] = {}
         for qps in qpss:
             ttft = {}
+            payload[scen][str(qps)] = {}
             for sched in ("immediate", "sbs", "sbs-la"):
-                reqs = generate(spec, qps=qps, duration=15, seed=11)
+                reqs = generate(spec, qps=qps, duration=duration, seed=11)
                 sim = PDClusterSim(cfg, scfg, scheduler=sched)
-                rep = sim.run(reqs, 15, slo_e2e=15.0)
+                rep = sim.run(reqs, duration, slo_e2e=15.0)
                 ttft[sched] = rep.ttft_mean
+                payload[scen][str(qps)][sched] = rep.json_row()
                 report(f"{sched:>12} {qps:>5}  {rep.row()}")
                 rows.append(f"e2e/{scen}/{sched}/qps={qps},"
                             f"{rep.ttft_mean*1e6:.0f},"
                             f"goodput={rep.goodput*100:.1f}%")
             gain = 1 - ttft["sbs"] / ttft["immediate"]
             report(f"{'':>12} SBS TTFT vs immediate: {gain*100:+.1f}%")
+    JSON_PAYLOAD = payload
     return rows

@@ -1,13 +1,20 @@
 """Benchmark driver — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--json]
 
 Prints human-readable tables plus ``name,us_per_call,derived`` CSV lines
-(collected at the end under == CSV ==).
+(collected at the end under == CSV ==).  ``--json`` additionally writes
+``BENCH_e2e.json`` (TTFT p50/p99 + throughput per scheduler per scenario
+from the e2e_pd bench) so the perf trajectory is machine-trackable across
+PRs; ``--quick`` asks benches that support it for a reduced sweep (the CI
+smoke path).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
 from typing import List
@@ -24,26 +31,46 @@ BENCHES = [
     ("roofline", "§Roofline dry-run table"),
 ]
 
+JSON_PATH = "BENCH_e2e.json"
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for benches that support it")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write {JSON_PATH} with the e2e_pd payload")
     args = ap.parse_args()
 
     csv: List[str] = ["name,us_per_call,derived"]
+    payload = None
     for mod_name, desc in BENCHES:
         if args.only and args.only != mod_name:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         print(f"\n{'='*72}\n== {mod_name}: {desc}\n{'='*72}", flush=True)
         t0 = time.time()
+        kwargs = {}
+        if "quick" in inspect.signature(mod.main).parameters:
+            kwargs["quick"] = args.quick
         try:
-            rows = mod.main(lambda s: print(s, flush=True))
+            rows = mod.main(lambda s: print(s, flush=True), **kwargs)
             csv.extend(rows or [])
+            if getattr(mod, "JSON_PAYLOAD", None) is not None:
+                payload = mod.JSON_PAYLOAD
         except Exception as e:
             print(f"BENCH FAILED: {e!r}")
             csv.append(f"{mod_name},NaN,FAILED")
         print(f"[{mod_name} took {time.time()-t0:.1f}s]")
+    if args.json:
+        if payload is None:
+            print(f"--json: no payload collected (run the e2e_pd bench)",
+                  file=sys.stderr)
+            sys.exit(1)
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\nwrote {os.path.abspath(JSON_PATH)}")
     print(f"\n{'='*72}\n== CSV ==\n{'='*72}")
     for line in csv:
         print(line)

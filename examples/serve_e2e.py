@@ -1,18 +1,39 @@
-"""End-to-end driver: serve a small model with batched requests through the
-REAL SBS control plane — threaded engines execute true chunked prefill and
-decode on jitted JAX forwards; EndForward feedback adapts the interval.
+"""End-to-end driver: serve a small model through the REAL P/D-separated
+SBS control plane — ClusterRuntime in realtime mode drives threaded
+engines executing true chunked prefill, KV-cache handoff, and continuous
+batched decode on jitted JAX forwards; EndForward feedback adapts the
+dispatch interval online.  Runs every scheduler variant over the same
+request set and reports per-request TTFT.
 
     PYTHONPATH=src python examples/serve_e2e.py [--requests 8] [--arch ID]
+        [--schedulers immediate,sbs,sbs-la] [--timeout 120]
+
+Exits non-zero if any request fails to finish within the timeout (used
+by `scripts/ci.sh --real-smoke`).
 """
 import argparse
 import random
+import sys
 
 import jax
 
 from repro.config import ServingConfig, get_arch
 from repro.core.types import Request
 from repro.models import init_params
+from repro.serving.real_engine import EngineSpec
 from repro.serving.server import RealSBSServer
+
+
+def make_requests(n, cfg, max_new, seed):
+    rng = random.Random(seed)
+    lens = [rng.randrange(20, 90) for _ in range(n)]
+    toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(L))
+            for L in lens]
+    # fresh Request objects per serve() call (timing stamps are per-run)
+    return lambda: [
+        Request(rid=i, arrival_time=i * 0.05, input_len=lens[i],
+                output_len=max_new, tokens=toks[i])
+        for i in range(n)]
 
 
 def main():
@@ -21,32 +42,44 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=float, default=120.0)
+    ap.add_argument("--schedulers", default="immediate,sbs,sbs-la")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = random.Random(args.seed)
-    reqs = []
-    for i in range(args.requests):
-        L = rng.randrange(20, 90)
-        reqs.append(Request(
-            rid=i, arrival_time=i * 0.05, input_len=L,
-            output_len=args.max_new,
-            tokens=tuple(rng.randrange(cfg.vocab_size) for _ in range(L))))
+    fresh = make_requests(args.requests, cfg, args.max_new, args.seed)
 
     scfg = ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=2,
-                         chunk_size=32, t_default=0.05, l_net=0.001)
-    srv = RealSBSServer(cfg, params, serving_cfg=scfg,
-                        max_len=160, max_new=args.max_new)
-    print(f"serving {len(reqs)} requests on {cfg.name} "
-          f"({scfg.num_prefill_instances} instances × "
-          f"{scfg.prefill_dp_per_instance} DPs, chunk={scfg.chunk_size})")
-    gens = srv.serve(reqs, timeout=600)
-    for g in gens:
-        print(f"  rid={g.rid} ttft={g.ttft*1000:7.1f}ms tokens={g.tokens}")
-    print(f"done: {len(gens)}/{len(reqs)}; adapted "
-          f"I_opt={srv.state.interval.interval*1000:.1f}ms "
-          f"T̄_fwd={srv.state.interval.t_fwd*1000:.1f}ms")
+                         num_decode_instances=1, decode_dp_per_instance=2,
+                         chunk_size=32, t_default=0.05, l_net=0.001,
+                         max_batch_per_dp=8)
+    print(f"serving {args.requests} requests on {cfg.name} "
+          f"({scfg.num_prefill_instances}P x {scfg.prefill_dp_per_instance}DP"
+          f" -> {scfg.num_decode_instances}D x {scfg.decode_dp_per_instance}DP,"
+          f" chunk={scfg.chunk_size})")
+    # one shared spec: each jitted chunk/step shape compiles once for the
+    # whole scheduler sweep
+    spec = EngineSpec(cfg, params, max_len=160,
+                      max_batch=scfg.max_batch_per_dp, max_new=args.max_new)
+    ok = True
+    for sched in args.schedulers.split(","):
+        reqs = fresh()
+        srv = RealSBSServer(cfg, params, serving_cfg=scfg, scheduler=sched,
+                            max_len=160, max_new=args.max_new, spec=spec)
+        gens = srv.serve(reqs, timeout=args.timeout)
+        print(f"\n== scheduler={sched}: {len(gens)}/{len(reqs)} finished; "
+              f"adapted I_opt={srv.state.interval.interval*1000:.1f}ms "
+              f"T_fwd={srv.state.interval.t_fwd*1000:.1f}ms")
+        for g in gens:
+            print(f"  rid={g.rid} ttft={g.ttft*1000:7.1f}ms tokens={g.tokens}")
+        if len(gens) < len(reqs):
+            missing = sorted(set(r.rid for r in reqs)
+                             - set(g.rid for g in gens))
+            print(f"  UNFINISHED rids: {missing}")
+            ok = False
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,29 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 entry point.
 #
-#   scripts/ci.sh          fast tier-1: full suite minus @slow model cases
-#                          + a smoke invocation of the benchmark harness
-#   scripts/ci.sh --full   everything, including @slow cases (equivalent
-#                          to the ROADMAP tier-1 command `pytest -x -q`)
+#   scripts/ci.sh               fast tier-1: full suite minus @slow model
+#                               cases + benchmark smoke (microbench + quick
+#                               e2e_pd emitting BENCH_e2e.json)
+#   scripts/ci.sh --full        everything, including @slow cases
+#                               (equivalent to the ROADMAP tier-1 command
+#                               `pytest -x -q`)
+#   scripts/ci.sh --real-smoke  real-engine smoke only: examples/serve_e2e.py
+#                               on a tiny config through the REAL P/D
+#                               ClusterRuntime plane, 60s budget, failing on
+#                               any unfinished request
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--real-smoke" ]]; then
+    echo "== real-engine smoke (serve_e2e, 60s budget) =="
+    PYTHONPATH=src timeout 60 python examples/serve_e2e.py \
+        --arch granite-moe-1b-a400m --requests 4 --max-new 3 \
+        --schedulers sbs-la --timeout 55 \
+        || { echo "real smoke FAILED (unfinished requests or >60s)" >&2
+             exit 1; }
+    echo "REAL SMOKE OK"
+    exit 0
+fi
 
 echo "== tier-1 tests =="
 if [[ "${1:-}" == "--full" ]]; then
@@ -20,6 +37,14 @@ out=$(PYTHONPATH=src:. python benchmarks/run.py --only microbench)
 echo "$out"
 if grep -q "BENCH FAILED" <<<"$out"; then
     echo "benchmark smoke FAILED" >&2
+    exit 1
+fi
+
+echo "== benchmark smoke (e2e_pd --quick --json -> BENCH_e2e.json) =="
+out=$(PYTHONPATH=src:. python benchmarks/run.py --only e2e_pd --quick --json)
+echo "$out"
+if grep -q "BENCH FAILED" <<<"$out" || [[ ! -s BENCH_e2e.json ]]; then
+    echo "e2e_pd smoke FAILED (no BENCH_e2e.json)" >&2
     exit 1
 fi
 echo "CI OK"

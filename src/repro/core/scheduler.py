@@ -1,9 +1,10 @@
 """The Staggered Batch Scheduler (SBS) main loop + immediate-dispatch
 baselines (paper §4, Figure 5).
 
-The scheduler is CLOCK-DRIVEN and ENGINE-AGNOSTIC: a driver (the
-discrete-event simulator in repro.serving.cluster, or the threaded real
-server in repro.serving.server) calls
+The scheduler is CLOCK-DRIVEN and ENGINE-AGNOSTIC: the driver is always
+`repro.serving.runtime.ClusterRuntime`, over simulated engines (virtual
+clock) or the real jitted-JAX engines of repro.serving.real_engine
+(wall clock) — the scheduler cannot tell the difference.  It calls
 
     on_arrival(req, now)      when a request enters the system
     poll(now)                 -> list[DispatchCommand] to execute
@@ -71,6 +72,12 @@ class StaggeredBatchScheduler(PrefillScheduler):
         self.util_history: List[float] = []
 
     # ------------------------------------------------------------------
+    def reset_clock(self) -> None:
+        """A new driver run restarts its clock at 0: clear the time-gated
+        dispatch state so stamps from a previous run's timeline cannot
+        stall the staggered interval (called by ClusterRuntime.run)."""
+        self._last_dispatch = -float("inf")
+
     def on_arrival(self, req: Request, now: float) -> None:
         req.phase = RequestPhase.QUEUED
         self.buffer.append(req)
@@ -269,6 +276,16 @@ class DecodeScheduler:
         self._waiting_since: Dict[int, float] = {}   # inst -> oldest unacked
         self._last_step: Dict[int, float] = {}
 
+    def reset_clock(self) -> None:
+        """New driver run, clock restarts at 0 — drop time stamps taken
+        on the previous run's timeline (batching-window gate, watchdog
+        bookkeeping).  Quarantine/EWMA state is timeline-free and kept."""
+        self._last = -float("inf")
+        self._last_step.clear()
+        self._waiting_since.clear()
+        self._quarantined_at.clear()
+        self.quarantined.clear()    # idle between runs: re-probe on place
+
     def _allocate(self, batch: List[Request]) -> Dict:
         if self.alloc == "load_aware":
             return schedule_decode_global(
@@ -280,8 +297,9 @@ class DecodeScheduler:
                                      self.iqr_k)
 
     def on_handoff(self, req: Request, now: float) -> Optional[Dict]:
-        """Prefill finished; route into a decode DP. Immediate mode places
-        right away, SBS buffers until the window tick."""
+        """Prefill finished (KV arrived over the P/D transfer — simulated
+        delay or real cache handoff); route into a decode DP. Immediate
+        mode places right away, SBS buffers until the window tick."""
         if self.mode == "immediate":
             return schedule_decode_immediate(
                 [req], self.state.decode_dps, self.policy, self._rr)

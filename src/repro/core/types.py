@@ -103,8 +103,12 @@ class DecodeDPState:
         self.batch += 1
         self.kv_tokens += kv_len
 
-    def step(self) -> None:
-        self.kv_tokens += self.batch    # each running req grows by 1 token
+    def step(self, n: Optional[int] = None) -> None:
+        """Each stepped request grows by 1 KV token.  `n` is the number of
+        requests that actually participated in the step — on the real
+        plane this can lag `batch` (admitted requests join the padded
+        batch only between steps), so engines pass it explicitly."""
+        self.kv_tokens += self.batch if n is None else n
 
     def release(self, kv_len: int) -> None:
         self.batch = max(0, self.batch - 1)

@@ -3,9 +3,12 @@ from repro.models.model import (
     abstract_params,
     init_cache,
     abstract_cache,
+    cache_join,
+    cache_take,
     forward_train,
     loss_fn,
     prefill,
+    prefill_chunk,
     decode_step,
 )
 
@@ -14,8 +17,11 @@ __all__ = [
     "abstract_params",
     "init_cache",
     "abstract_cache",
+    "cache_join",
+    "cache_take",
     "forward_train",
     "loss_fn",
     "prefill",
+    "prefill_chunk",
     "decode_step",
 ]

@@ -11,6 +11,7 @@ Public API (all pure, cfg static):
     init_cache  / abstract_cache
     prefill(cfg, params, tokens, ...)  -> (logits_last, cache)
     decode_step(cfg, params, token, cache) -> (logits, cache)
+    cache_join(dst, src, slot) / cache_take(src, slot)   (continuous batching)
     forward_train / loss_fn
 """
 from __future__ import annotations
@@ -179,6 +180,70 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=jnp.bfloat16):
     return jax.eval_shape(
         functools.partial(init_cache, cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching cache surgery (join-on-handoff / leave-on-finish)
+# ---------------------------------------------------------------------------
+#
+# A batched decode cache is a padded ring of `max_batch` independent slots:
+# rows never interact through attention (each row attends only to its own
+# KV) so a slot can be overwritten ("join") or abandoned ("leave") without
+# touching its neighbours.  The batch axis is 0 for the top-level
+# `cur`/`kv_pos` arrays and 1 for every stacked per-layer entry (axis 0 is
+# the layer stack).  Inactive slots keep stepping on garbage — harmless,
+# because attn_decode writes the current token's K/V before attending, so
+# a fresh slot always has >= 1 valid key (no empty-softmax NaNs).  The one
+# cross-row coupling is MoE expert *capacity*, which is computed over the
+# whole batch: padded slots can contend for expert slots, so batched MoE
+# decode is equivalent to serial decode only up to capacity pressure
+# (dense/SSM architectures are exactly equivalent).
+
+
+def _slot_axis(key: str) -> int:
+    return 0 if key in ("cur", "kv_pos") else 1
+
+
+def cache_join(dst: Dict, src: Dict, slot) -> Dict:
+    """Insert the batch-1 cache `src` (a finished prefill) into slot `slot`
+    of the padded batch cache `dst`.  Both caches must share the same
+    model config and max_len.  `slot` may be a traced int32 (jit-safe)."""
+    if dst["kv_pos"].shape[1] != src["kv_pos"].shape[1]:
+        raise ValueError(
+            f"cache_join: max_len mismatch (dst S_buf="
+            f"{dst['kv_pos'].shape[1]}, src S_buf={src['kv_pos'].shape[1]})")
+
+    def ins(d, s, axis):
+        idx = (slice(None),) * axis + (slot,)
+        row = jnp.take(s, 0, axis=axis)
+        return d.at[idx].set(row.astype(d.dtype))
+
+    out: Dict = {}
+    for key, val in dst.items():
+        ax = _slot_axis(key)
+        if key in ("cur", "kv_pos"):
+            out[key] = ins(val, src[key], ax)
+        else:
+            out[key] = jax.tree.map(lambda d, s, a=ax: ins(d, s, a),
+                                    val, src[key])
+    return out
+
+
+def cache_take(src: Dict, slot: int) -> Dict:
+    """Extract slot `slot` of a padded batch cache as a batch-1 cache
+    (the inverse of cache_join — used to migrate a request off a drained
+    decode instance).  `slot` must be a concrete Python int."""
+    def sel(a, axis):
+        return jax.lax.slice_in_dim(a, slot, slot + 1, axis=axis)
+
+    out: Dict = {}
+    for key, val in src.items():
+        ax = _slot_axis(key)
+        if key in ("cur", "kv_pos"):
+            out[key] = sel(val, ax)
+        else:
+            out[key] = jax.tree.map(lambda v, a=ax: sel(v, a), val)
+    return out
 
 
 # ---------------------------------------------------------------------------

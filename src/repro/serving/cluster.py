@@ -67,6 +67,23 @@ def build_prefill_scheduler(state: GlobalState, scfg: ServingConfig,
     raise ValueError(scheduler)
 
 
+def build_decode_scheduler(state: GlobalState, scfg: ServingConfig,
+                           scheduler: str, policy: str = "round_robin",
+                           watchdog_multiplier: float = 0.0
+                           ) -> DecodeScheduler:
+    """Decode plane scheduler for any driver (sim or real):
+    'sbs' = IQR-lex batched placement, 'sbs-la' = Load-Aware Global
+    Allocation, 'immediate' = per-handoff placement baseline."""
+    if scheduler not in ("sbs", "sbs-la", "immediate"):
+        raise ValueError(scheduler)
+    mode = "immediate" if scheduler == "immediate" else "sbs"
+    alloc = "load_aware" if scheduler == "sbs-la" else "lex"
+    return DecodeScheduler(
+        state, mode=mode, policy=policy, iqr_k=scfg.iqr_k,
+        window=scfg.l_net * 10 + 0.02, alloc=alloc,
+        watchdog_multiplier=watchdog_multiplier)
+
+
 def build_prefill_instances(state: GlobalState, scfg: ServingConfig,
                             cost: CostModel):
     return [SimPrefillInstance(
@@ -117,16 +134,11 @@ class DecodeClusterSim:
                  cost: Optional[CostModel] = None,
                  snapshot_every: int = 1,
                  watchdog_multiplier: float = 0.0):
-        if scheduler not in ("sbs", "sbs-la", "immediate"):
-            raise ValueError(scheduler)
         self.cfg_s = serving_cfg
         self.cost = cost or CostModel(model_cfg)
         self.state = build_state(serving_cfg)
-        mode = "immediate" if scheduler == "immediate" else "sbs"
-        alloc = "load_aware" if scheduler == "sbs-la" else "lex"
-        self.sched = DecodeScheduler(
-            self.state, mode=mode, policy=policy, iqr_k=serving_cfg.iqr_k,
-            window=serving_cfg.l_net * 10 + 0.02, alloc=alloc,
+        self.sched = build_decode_scheduler(
+            self.state, serving_cfg, scheduler, policy=policy,
             watchdog_multiplier=watchdog_multiplier)
         self.instances = build_decode_instances(self.state, serving_cfg,
                                                 self.cost)

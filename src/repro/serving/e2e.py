@@ -13,10 +13,9 @@ import dataclasses
 from typing import Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
-from repro.core.scheduler import DecodeScheduler
 from repro.core.types import Request
 from repro.serving.cluster import (
-    build_decode_instances, build_prefill_instances,
+    build_decode_instances, build_decode_scheduler, build_prefill_instances,
     build_prefill_scheduler, build_state,
 )
 from repro.serving.costmodel import CostModel, ICI_BW
@@ -28,18 +27,27 @@ from repro.serving.runtime import ClusterRuntime
 class E2EReport:
     n_finished: int
     ttft_mean: float
+    ttft_p50: float
     ttft_p99: float
     tpot_mean: float
     e2e_mean: float
     goodput: float                  # fraction finishing within slo_e2e
     prefill_util: float
+    throughput: float = 0.0        # decode tokens / s over the run
 
     def row(self) -> str:
         return (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
                 f"p99={self.ttft_p99*1000:.0f}ms "
                 f"tpot={self.tpot_mean*1000:.1f}ms "
                 f"e2e={self.e2e_mean:.2f}s goodput={self.goodput*100:.1f}% "
-                f"util={self.prefill_util*100:.1f}%")
+                f"util={self.prefill_util*100:.1f}% "
+                f"thr={self.throughput:.0f} tok/s")
+
+    def json_row(self) -> dict:
+        return {"n_finished": self.n_finished,
+                "ttft_p50": self.ttft_p50, "ttft_p99": self.ttft_p99,
+                "ttft_mean": self.ttft_mean, "tpot_mean": self.tpot_mean,
+                "throughput": self.throughput, "goodput": self.goodput}
 
 
 class PDClusterSim:
@@ -59,17 +67,14 @@ class PDClusterSim:
         self.transfer_bw = transfer_bw
         if scheduler in ("sbs", "sbs-la"):
             self.psched = build_prefill_scheduler(self.state, scfg, "sbs")
-            self.dsched = DecodeScheduler(
-                self.state, mode="sbs", iqr_k=scfg.iqr_k,
-                alloc="load_aware" if scheduler == "sbs-la" else "lex",
-                watchdog_multiplier=watchdog_multiplier)
         elif scheduler == "immediate":
             self.psched = build_prefill_scheduler(self.state, scfg,
                                                   "immediate-rr")
-            self.dsched = DecodeScheduler(self.state, mode="immediate",
-                                          policy="round_robin")
         else:
             raise ValueError(scheduler)
+        self.dsched = build_decode_scheduler(
+            self.state, scfg, scheduler,
+            watchdog_multiplier=watchdog_multiplier)
         self.prefill = build_prefill_instances(self.state, scfg, self.cost)
         self.decode = build_decode_instances(self.state, scfg, self.cost)
         self.runtime = ClusterRuntime(
@@ -84,8 +89,8 @@ class PDClusterSim:
 
     def run(self, requests: Sequence[Request], duration: float,
             slo_e2e: float = 20.0) -> E2EReport:
-        self.runtime.run(requests, duration,
-                         horizon=duration * 30 + 120.0)
+        end = self.runtime.run(requests, duration,
+                               horizon=duration * 30 + 120.0)
         done = [r for r in requests if r.finish_time is not None]
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tpots = [(r.finish_time - r.first_token_time) / max(r.generated - 1, 1)
@@ -94,6 +99,8 @@ class PDClusterSim:
         good = sum(1 for x in e2e if x <= slo_e2e) / max(len(requests), 1)
         return E2EReport(
             n_finished=len(done),
-            ttft_mean=mean(ttfts), ttft_p99=percentile(ttfts, 99),
+            ttft_mean=mean(ttfts), ttft_p50=percentile(ttfts, 50),
+            ttft_p99=percentile(ttfts, 99),
             tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
-            prefill_util=self.runtime.prefill_util)
+            prefill_util=self.runtime.prefill_util,
+            throughput=self.runtime.tokens_generated / max(end, 1e-9))

@@ -1,5 +1,9 @@
 """Simulated inference engines (the Resource Plane of Figure 5).
 
+Both classes satisfy the `EnginePlane` contract (repro.serving.plane):
+they are the cost-model-clocked backends; repro.serving.real_engine holds
+the jitted-JAX backends behind the same interface.
+
 A prefill instance is a NON-PREEMPTIVE DISCRETE BATCH PROCESSOR (§3.2):
 once a pass starts the engine is locked; arriving work accumulates in the
 per-DP device-side queue. The pass duration is the cost-model time of the
@@ -9,23 +13,20 @@ as parallelization bubbles exactly as in Figure 3.
 from __future__ import annotations
 
 import collections
-import dataclasses
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.types import DispatchCommand, EndForward, Request
 from repro.serving.costmodel import CostModel
+from repro.serving.plane import (
+    DecodeEngine, PassResult, PrefillEngine, StartResult,
+)
+
+__all__ = ["PassResult", "SimPrefillInstance", "SimDecodeInstance"]
 
 
-@dataclasses.dataclass
-class PassResult:
-    end_forwards: List[EndForward]
-    completed: List[Request]      # prefill fully done at pass end
-    processed_per_dp: Dict[int, int]
-
-
-class SimPrefillInstance:
+class SimPrefillInstance(PrefillEngine):
     def __init__(self, instance_id: int, dp_ids: Sequence[int],
-                 chunk: int, cost: CostModel):
+                 chunk: int, cost: Optional[CostModel]):
         self.instance_id = instance_id
         self.dp_ids = list(dp_ids)
         self.chunk = chunk
@@ -58,8 +59,11 @@ class SimPrefillInstance:
         return any(self.queues[d] for d in self.dp_ids)
 
     # ------------------------------------------------------------------
-    def start_pass(self, now: float) -> Optional[float]:
-        """Begin a forward pass; returns its duration or None if idle."""
+    def _begin_pass(self, now: float
+                    ) -> Optional[Dict[int, List[Tuple[Request, int]]]]:
+        """Form the chunk-bounded per-DP batch and lock the engine.
+        Shared by the simulated and real backends — only the pass
+        *duration* differs (cost model vs measured wall time)."""
         if self.busy or not self.has_work():
             return None
         batch: Dict[int, List[Tuple[Request, int]]] = {}
@@ -90,11 +94,17 @@ class SimPrefillInstance:
             return None
         self._current = batch
         self.busy = True
-        dp_tokens = [sum(t for _, t in batch.get(d, [])) for d in self.dp_ids]
-        dur = self.cost.prefill_pass_time(dp_tokens, chunk=self.chunk)
         self.passes += 1
         self.capacity_offered += len(self.dp_ids) * self.chunk
-        return dur
+        return batch
+
+    def start_pass(self, now: float) -> StartResult:
+        """Begin a forward pass; returns its duration or None if idle."""
+        batch = self._begin_pass(now)
+        if batch is None:
+            return None
+        dp_tokens = [sum(t for _, t in batch.get(d, [])) for d in self.dp_ids]
+        return self.cost.prefill_pass_time(dp_tokens, chunk=self.chunk)
 
     def finish_pass(self, now: float) -> PassResult:
         assert self.busy and self._current is not None
@@ -128,11 +138,11 @@ class SimPrefillInstance:
         return self.tokens_processed / self.capacity_offered
 
 
-class SimDecodeInstance:
+class SimDecodeInstance(DecodeEngine):
     """Decode instance: DP units step together behind the sync barrier."""
 
     def __init__(self, instance_id: int, dp_ids: Sequence[int],
-                 cost: CostModel):
+                 cost: Optional[CostModel]):
         self.instance_id = instance_id
         self.dp_ids = list(dp_ids)
         self.cost = cost
@@ -158,7 +168,12 @@ class SimDecodeInstance:
         self.epoch += 1     # any step_end still in flight is now stale
         return out
 
-    def start_step(self, dp_states) -> Optional[float]:
+    def _target_len(self, req: Request) -> int:
+        """Tokens at which `req` is finished (real plane may cap this)."""
+        return req.output_len
+
+    def start_step(self, dp_states, now: Optional[float] = None
+                   ) -> StartResult:
         if self.busy or not self.has_work():
             return None
         self.busy = True
@@ -179,13 +194,13 @@ class SimDecodeInstance:
             st = by_id[d]
             n = len(self.running[d])
             if n:
-                st.step()                       # K_i += B_i
+                st.step(n)                      # K_i += participants
                 self.tokens_generated += n
             for req in self.running[d]:
                 req.generated += 1
                 if req.first_token_time is None:
                     req.first_token_time = now
-                if req.generated >= req.output_len:
+                if req.generated >= self._target_len(req):
                     req.finish_time = now
                     st.release(req.input_len + req.generated)
                     finished.append(req)

@@ -1,0 +1,120 @@
+"""The EnginePlane contract — the single engine-facing interface behind
+`ClusterRuntime`.
+
+A *plane* is a scheduler plus a set of engine instances.  The runtime is
+the only driver: it forwards scheduler decisions to the instances and
+turns instance completions back into scheduler feedback.  Everything an
+engine must expose to participate is defined here, and BOTH backends
+satisfy it:
+
+  simulated   SimPrefillInstance / SimDecodeInstance (serving.engine) —
+              pass/step durations come from the roofline cost model and
+              the runtime advances a virtual clock.
+  real        RealPrefillEngine / RealDecodeEngine (serving.real_engine)
+              — passes/steps are actual jitted JAX forwards executed on a
+              worker thread; the runtime uses a wall clock
+              (RealtimeEventLoop) and blocks until completions are
+              posted.
+
+The split point is the return value of `start_pass` / `start_step`:
+
+  float    the pass/step will take this many (virtual) seconds — the
+           runtime schedules the matching `pass_end` / `step_end` event
+           on its heap (simulated plane).
+  ASYNC    the pass/step was submitted to a worker thread — the engine
+           will post `("pass_end", self)` / `("step_end", (self, epoch,
+           dur))` to the runtime's realtime loop when the forwards
+           complete (real plane).
+  None     idle (no work, or a pass/step already in flight).
+
+`finish_pass` / `finish_step` are ALWAYS called on the runtime thread, so
+all scheduler-visible state mutation (Request bookkeeping, DecodeDPState
+accounting, KV handoff publication) is single-threaded; worker threads
+only run pure JAX computations on snapshots taken at submit time.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.types import DispatchCommand, EndForward, Request
+
+
+class _Async:
+    """Sentinel returned by real engines from start_pass/start_step."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "<ASYNC>"
+
+
+ASYNC = _Async()
+
+#: what start_pass / start_step may return
+StartResult = Union[float, _Async, None]
+
+
+@dataclasses.dataclass
+class PassResult:
+    """Outcome of one prefill pass (sim and real)."""
+    end_forwards: List[EndForward]
+    completed: List[Request]      # prefill fully done at pass end
+    processed_per_dp: Dict[int, int]
+
+
+class PrefillEngine(abc.ABC):
+    """One prefill instance: a non-preemptive discrete batch processor
+    over its DP units (§3.2)."""
+
+    instance_id: int
+    dp_ids: List[int]
+
+    @abc.abstractmethod
+    def enqueue(self, cmd: DispatchCommand, now: float) -> None:
+        """Accept a scheduler dispatch into the per-DP device queues."""
+
+    @abc.abstractmethod
+    def start_pass(self, now: float) -> StartResult:
+        """Begin a forward pass over the queued work (see module doc)."""
+
+    @abc.abstractmethod
+    def finish_pass(self, now: float) -> PassResult:
+        """Complete the pass begun by start_pass (runtime thread only)."""
+
+    @abc.abstractmethod
+    def has_work(self) -> bool:
+        """Readiness probe: any queued tokens on any DP?"""
+
+    @abc.abstractmethod
+    def backlog(self, dp_id: int) -> int:
+        """Backlog probe: queued tokens on one DP (EndForward payload)."""
+
+
+class DecodeEngine(abc.ABC):
+    """One decode instance: DP units step together behind the sync
+    barrier; requests join on KV handoff and leave on completion."""
+
+    instance_id: int
+    dp_ids: List[int]
+    epoch: int          # bumped by drain(); invalidates in-flight steps
+
+    @abc.abstractmethod
+    def admit(self, dp_id: int, req: Request) -> None:
+        """Place a handed-off request onto one of this instance's DPs."""
+
+    @abc.abstractmethod
+    def start_step(self, dp_states: Sequence, now: Optional[float] = None
+                   ) -> StartResult:
+        """Begin one generation step over all running requests."""
+
+    @abc.abstractmethod
+    def finish_step(self, now: float, dp_states: Sequence) -> List[Request]:
+        """Complete the step; returns the requests that finished."""
+
+    @abc.abstractmethod
+    def has_work(self) -> bool:
+        """Readiness probe: any running (or pending-join) requests?"""
+
+    @abc.abstractmethod
+    def drain(self) -> Dict[int, List[Request]]:
+        """Watchdog path: strip all resident work off this instance."""

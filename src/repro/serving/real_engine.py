@@ -1,0 +1,416 @@
+"""Real JAX engine backends for the EnginePlane contract.
+
+`RealPrefillEngine` / `RealDecodeEngine` plug into `ClusterRuntime`
+exactly where `SimPrefillInstance` / `SimDecodeInstance` do — same
+scheduler feedback, same DecodeDPState accounting — but every pass/step
+is an actual jitted model forward executed on the engine's worker
+thread.  The runtime runs in realtime mode (wall clock): `start_pass` /
+`start_step` return the ASYNC sentinel, and the worker posts the
+matching `pass_end` / `step_end` completion to the runtime's event loop.
+
+Prefill is TRUE chunked prefill: each granted (request, tokens) slice
+extends the request's batch-1 KV cache via `prefill_chunk`; when the
+prompt completes, the first output token (argmax of the last-chunk
+logits) plus the finished cache are published on the `KVHandoffBus` —
+the paper's P/D KV-cache transfer, priced by `transfer_time` on the
+runtime heap and physically realised at join time.
+
+Decode is CONTINUOUS BATCHED decode: each DP unit owns a padded
+`max_batch`-slot cache (`models.model.init_cache`); handed-off requests
+JOIN by `cache_join` into a free slot, every step runs one batched
+`decode_step` per occupied DP behind the instance sync barrier, and
+finished requests LEAVE by simply freeing their slot.  All scheduler
+state mutation happens on the runtime thread (finish_pass/finish_step);
+worker threads only execute JAX computations on snapshots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.core.types import Request, RequestPhase
+from repro.models.model import (
+    cache_join, cache_take, decode_step, init_cache, prefill_chunk,
+)
+from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+from repro.serving.plane import ASYNC, PassResult, StartResult
+
+
+# ---------------------------------------------------------------------------
+# Shared engine spec + KV handoff bus
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineSpec:
+    """Model + jit context shared by every engine of one deployment, so
+    each (chunk-shape, batch-shape) compiles exactly once per process
+    instead of once per engine instance."""
+    cfg: ModelConfig
+    params: Any
+    max_len: int = 256
+    max_batch: int = 8          # decode slots per DP unit
+    max_new: int = 0            # 0 = no cap on generated tokens
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self.jit_prefill_chunk = jax.jit(
+            lambda p, t, c: prefill_chunk(cfg, p, t, c))
+        self.jit_decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c))
+        self.jit_join = jax.jit(cache_join)
+
+    def request_cache(self) -> Dict:
+        return init_cache(self.cfg, 1, self.max_len)
+
+    def batch_cache(self) -> Dict:
+        return init_cache(self.cfg, self.max_batch, self.max_len)
+
+    def target_len(self, req: Request) -> int:
+        if self.max_new:
+            return min(req.output_len, self.max_new)
+        return req.output_len
+
+
+@dataclasses.dataclass
+class GenState:
+    """Per-request generation context carried across the P/D handoff."""
+    rid: int
+    cache: Optional[Dict]       # parked KV cache (None while resident)
+    tokens: List[int]
+
+
+class KVHandoffBus:
+    """Prefill → decode KV-cache handoff registry (one per deployment).
+
+    The prefill plane publishes a finished request's cache + first token;
+    the decode plane takes the cache at join time.  A drained (watchdog)
+    decode instance re-parks its residents' caches here so re-dispatch
+    lands them on a healthy instance with generation state intact.  All
+    access happens on the runtime thread."""
+
+    def __init__(self):
+        self._gens: Dict[int, GenState] = {}
+
+    def publish(self, rid: int, cache: Dict, first_token: int) -> GenState:
+        gen = GenState(rid=rid, cache=cache, tokens=[first_token])
+        self._gens[rid] = gen
+        return gen
+
+    def gen(self, rid: int) -> GenState:
+        return self._gens[rid]
+
+    def get(self, rid: int) -> Optional[GenState]:
+        return self._gens.get(rid)
+
+
+class _Worker(threading.Thread):
+    """One serial job executor per engine (the engine's 'device')."""
+
+    def __init__(self, name: str):
+        super().__init__(daemon=True, name=name)
+        self.jobs: "queue.Queue[Optional[Any]]" = queue.Queue()
+
+    def submit(self, job) -> None:
+        self.jobs.put(job)
+
+    def stop(self) -> None:
+        self.jobs.put(None)
+
+    def run(self) -> None:
+        while True:
+            job = self.jobs.get()
+            if job is None:
+                return
+            job()
+
+
+class _WorkerOwner:
+    """start/stop lifecycle shared by the real engines.  Each start()
+    spawns a fresh worker thread, so a server can serve() repeatedly
+    after a COMPLETED run (after a timeout the deployment may hold
+    in-flight passes and is not reusable).  A worker-thread exception is
+    parked in `_error` and re-raised on the runtime thread by the next
+    start/finish call, so a failed forward surfaces immediately instead
+    of blocking the loop until its horizon."""
+
+    def __init__(self, tag: str):
+        self._tag = tag
+        self._worker: Optional[_Worker] = None
+        self._error: Optional[BaseException] = None
+
+    def start(self) -> None:
+        self._worker = _Worker(self._tag)
+        self._worker.start()
+
+    def stop(self) -> None:
+        if self._worker is not None:
+            self._worker.stop()
+
+    def join_worker(self, timeout: float = 10.0) -> None:
+        if self._worker is not None:
+            self._worker.join(timeout=timeout)
+            self._worker = None
+
+    def _raise_worker_error(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+# ---------------------------------------------------------------------------
+# Real prefill
+# ---------------------------------------------------------------------------
+
+
+class _PrefillCtx:
+    """Model-side state of one in-flight prefill (batch-1 chunked cache)."""
+
+    def __init__(self, spec: EngineSpec):
+        self.cache = spec.request_cache()
+        self.consumed = 0
+        self.first_token: Optional[int] = None
+
+
+class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
+    """Chunked-prefill engine: scheduler-side queueing/batch-forming and
+    EndForward bookkeeping are inherited from the simulated instance —
+    only the pass execution differs (jitted `prefill_chunk` on the worker
+    thread instead of a cost-model duration)."""
+
+    def __init__(self, instance_id: int, dp_ids: Sequence[int], chunk: int,
+                 spec: EngineSpec, bus: KVHandoffBus):
+        super().__init__(instance_id, dp_ids, chunk, cost=None)
+        _WorkerOwner.__init__(self, f"prefill-{instance_id}")
+        self.spec = spec
+        self.bus = bus
+        self._post = None
+        self._ctx: Dict[int, _PrefillCtx] = {}
+
+    # -- lifecycle -------------------------------------------------------
+    def bind_loop(self, loop) -> None:
+        self._post = loop.post
+
+    # -- EnginePlane -----------------------------------------------------
+    def start_pass(self, now: float) -> StartResult:
+        self._raise_worker_error()
+        batch = self._begin_pass(now)
+        if batch is None:
+            return None
+        post = self._post        # bound per run: an abandoned job cannot
+        self._worker.submit(     # post into a later run's loop
+            lambda: self._exec_pass(batch, post))
+        return ASYNC
+
+    def _exec_pass(self, batch: Dict[int, List[Tuple[Request, int]]],
+                   post) -> None:
+        # worker thread: pure model execution on engine-private contexts
+        try:
+            for taken in batch.values():
+                for req, tok in taken:
+                    self._run_chunk(req, tok)
+        except BaseException as e:      # surface on the runtime thread
+            self._error = e
+        post("pass_end", self)
+
+    def _run_chunk(self, req: Request, tok: int) -> None:
+        ctx = self._ctx.get(req.rid)
+        if ctx is None:
+            ctx = self._ctx[req.rid] = _PrefillCtx(self.spec)
+        ids = (req.tokens or ())[ctx.consumed: ctx.consumed + tok]
+        if ids:
+            arr = jnp.asarray([ids], jnp.int32)
+            logits, ctx.cache = self.spec.jit_prefill_chunk(
+                self.spec.params, arr, ctx.cache)
+            ctx.consumed += len(ids)
+            if ctx.consumed >= req.input_len and ctx.first_token is None:
+                ctx.first_token = int(jnp.argmax(logits[0]))
+
+    def finish_pass(self, now: float) -> PassResult:
+        self._raise_worker_error()
+        res = super().finish_pass(now)
+        for req in res.completed:
+            ctx = self._ctx.pop(req.rid, None)
+            if ctx is None or ctx.first_token is None:
+                raise RuntimeError(
+                    f"request {req.rid} completed prefill without model "
+                    f"state (tokens shorter than input_len?)")
+            # the paper's KV transfer: park cache + first token on the bus;
+            # the first output token is the argmax of the last-chunk logits
+            self.bus.publish(req.rid, ctx.cache, ctx.first_token)
+            req.generated = 1
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Real decode
+# ---------------------------------------------------------------------------
+
+
+class _DPDecodeState:
+    """One DP unit's padded continuous batch (lazily allocated)."""
+
+    def __init__(self, spec: EngineSpec):
+        self.spec = spec
+        self.cache: Optional[Dict] = None
+        self.slots: List[Optional[Request]] = [None] * spec.max_batch
+        self.next_tok: List[int] = [0] * spec.max_batch
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def occupied(self) -> bool:
+        return any(r is not None for r in self.slots)
+
+
+class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
+    """Continuous batched decode: join-on-handoff / leave-on-finish per
+    step.  Request/DPState bookkeeping (token counts, first-token stamps,
+    KV accounting, drain/epoch) is inherited from the simulated instance;
+    this class adds the physical batch caches and the jitted step."""
+
+    def __init__(self, instance_id: int, dp_ids: Sequence[int],
+                 spec: EngineSpec, bus: KVHandoffBus):
+        super().__init__(instance_id, dp_ids, cost=None)
+        _WorkerOwner.__init__(self, f"decode-{instance_id}")
+        self.spec = spec
+        self.bus = bus
+        self._post = None
+        self._dp: Dict[int, _DPDecodeState] = {
+            d: _DPDecodeState(spec) for d in dp_ids}
+        self._pending: List[Tuple[int, Request]] = []
+        self._slot_of: Dict[int, Tuple[int, int]] = {}   # rid -> (dp, slot)
+        self._participants: Dict[int, List[Tuple[Request, int]]] = {}
+        self._result: Optional[Dict[int, Tuple[Dict, List[int]]]] = None
+
+    # -- lifecycle -------------------------------------------------------
+    def bind_loop(self, loop) -> None:
+        self._post = loop.post
+
+    # -- EnginePlane -----------------------------------------------------
+    def admit(self, dp_id: int, req: Request) -> None:
+        # buffered: joins are applied between steps (start_step), never
+        # while a worker-thread step is in flight
+        self._pending.append((dp_id, req))
+
+    def has_work(self) -> bool:
+        return bool(self._pending) or super().has_work()
+
+    def _target_len(self, req: Request) -> int:
+        return self.spec.target_len(req)
+
+    def _apply_joins(self, now: float, dp_states) -> None:
+        by_id = {s.dp_id: s for s in dp_states}
+        still: List[Tuple[int, Request]] = []
+        for dp_id, req in self._pending:
+            st = self._dp[dp_id]
+            gen = self.bus.gen(req.rid)
+            if req.generated >= self._target_len(req):
+                # the prefill-emitted token already satisfied the request
+                # (output_len == 1): finish at join, never occupy a slot
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                req.finish_time = now
+                req.phase = RequestPhase.FINISHED
+                gen.cache = None
+                by_id[dp_id].release(req.input_len + req.generated)
+                continue
+            slot = st.free_slot()
+            if slot is None:        # over-packed DP: retry after this step
+                still.append((dp_id, req))
+                continue
+            if st.cache is None:
+                st.cache = self.spec.batch_cache()
+            st.cache = self.spec.jit_join(st.cache, gen.cache, slot)
+            gen.cache = None        # resident now; parked copy released
+            st.slots[slot] = req
+            st.next_tok[slot] = gen.tokens[-1]
+            self._slot_of[req.rid] = (dp_id, slot)
+            self.running[dp_id].append(req)
+        self._pending = still
+
+    def start_step(self, dp_states, now: Optional[float] = None
+                   ) -> StartResult:
+        self._raise_worker_error()
+        if self.busy:
+            return None
+        if self._pending:
+            self._apply_joins(now if now is not None else 0.0, dp_states)
+        if not super().has_work():
+            return None
+        self.busy = True
+        self.steps += 1
+        jobs: List[Tuple[int, Dict, jnp.ndarray]] = []
+        self._participants = {}
+        for d in self.dp_ids:
+            st = self._dp[d]
+            if not self.running[d]:
+                continue
+            self._participants[d] = [
+                (r, self._slot_of[r.rid][1]) for r in self.running[d]]
+            toks = jnp.asarray([[t] for t in st.next_tok], jnp.int32)
+            jobs.append((d, st.cache, toks))
+        epoch = self.epoch
+        post = self._post
+        self._worker.submit(lambda: self._exec_step(jobs, epoch, post))
+        return ASYNC
+
+    def _exec_step(self, jobs, epoch: int, post) -> None:
+        # worker thread: one batched decode_step per occupied DP (the
+        # instance-level sync barrier = all DPs in one serial job)
+        t0 = time.monotonic()
+        try:
+            res: Dict[int, Tuple[Dict, List[int]]] = {}
+            for dp_id, cache, toks in jobs:
+                logits, new_cache = self.spec.jit_decode(
+                    self.spec.params, toks, cache)
+                nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                res[dp_id] = (new_cache, nxt)
+            self._result = res
+        except BaseException as e:      # surface on the runtime thread
+            self._error = e
+        post("step_end", (self, epoch, time.monotonic() - t0))
+
+    def finish_step(self, now: float, dp_states) -> List[Request]:
+        self._raise_worker_error()
+        res, self._result = self._result, None
+        parts, self._participants = self._participants, {}
+        assert res is not None
+        for dp_id, (new_cache, nxt) in res.items():
+            st = self._dp[dp_id]
+            st.cache = new_cache
+            for req, slot in parts.get(dp_id, []):
+                tok = nxt[slot]
+                self.bus.gen(req.rid).tokens.append(tok)
+                st.next_tok[slot] = tok
+        finished = super().finish_step(now, dp_states)
+        for req in finished:
+            dp_id, slot = self._slot_of.pop(req.rid)
+            self._dp[dp_id].slots[slot] = None       # leave-on-finish
+        return finished
+
+    def drain(self) -> Dict[int, List[Request]]:
+        out = super().drain()   # clears running, bumps epoch, unlocks
+        # migrate resident KV back to the bus so re-dispatch can re-join
+        # the requests (with their generation state) on a healthy instance
+        for rid, (dp_id, slot) in list(self._slot_of.items()):
+            st = self._dp[dp_id]
+            self.bus.gen(rid).cache = cache_take(st.cache, slot)
+            st.slots[slot] = None
+        self._slot_of.clear()
+        for dp_id, req in self._pending:
+            out.setdefault(dp_id, []).append(req)
+        self._pending = []
+        self._participants = {}
+        self._result = None
+        return out

@@ -1,15 +1,27 @@
-"""ClusterRuntime — the single discrete-event loop behind every cluster
-topology (paper §5 experiments).
+"""ClusterRuntime — the single event loop behind every cluster topology
+(paper §5 experiments) AND the real serving path.
 
 Before this module the repo carried three separately implemented event
 loops (`PrefillClusterSim`, `DecodeClusterSim`, `PDClusterSim`), each with
 its own heap, poll-dedup and drain logic.  They are now thin configuration
-wrappers over one runtime with pluggable planes:
+wrappers over one runtime with pluggable planes (the EnginePlane contract,
+repro.serving.plane):
 
-  prefill plane   PrefillScheduler + SimPrefillInstance set
-  decode plane    DecodeScheduler + SimDecodeInstance set
+  prefill plane   PrefillScheduler + PrefillEngine set
+  decode plane    DecodeScheduler + DecodeEngine set
   handoff         optional prefill→decode coupling with a KV-transfer
                   latency function (the P/D-separated deployment)
+
+Two clock sources drive the same loop:
+
+  simulated  (realtime=False)  the default discrete-event mode: engines
+             return pass/step *durations* from the cost model and the
+             runtime advances a virtual clock along its heap.
+  realtime   (realtime=True)   wall-clock mode for real engines
+             (repro.serving.real_engine): engines return the ASYNC
+             sentinel, execute jitted forwards on worker threads, and
+             post completions to a RealtimeEventLoop; the runtime blocks
+             in `next_event_time`-driven waits instead of busy-polling.
 
 Event kinds on the shared heap:
   arrival      request enters the system (prefill plane, or decode plane
@@ -31,10 +43,12 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import queue
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.types import Request, RequestPhase
-from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+from repro.serving.plane import ASYNC, DecodeEngine, PrefillEngine
 
 
 class EventLoop:
@@ -54,17 +68,67 @@ class EventLoop:
         return bool(self._heap)
 
 
+class RealtimeEventLoop(EventLoop):
+    """Wall-clock event loop.  Heap times are seconds relative to loop
+    start; engine worker threads deliver completions through `post`.
+    `pop_wait` sleeps until the earlier of (next timed event, next posted
+    completion) — the blocking replacement for the old server busy-wait."""
+
+    def __init__(self):
+        super().__init__()
+        self._ext: "queue.Queue[Tuple[str, object]]" = queue.Queue()
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def post(self, kind: str, payload=None) -> None:
+        """Thread-safe completion delivery (engine worker threads)."""
+        self._ext.put((kind, payload))
+
+    def pop_wait(self, horizon: float, blocked: bool
+                 ) -> Optional[Tuple[float, int, str, object]]:
+        """Next event, or None when nothing can ever arrive (idle and no
+        in-flight work) or the horizon passed.  `blocked` marks in-flight
+        async work whose completion is worth waiting for."""
+        while True:
+            try:
+                kind, payload = self._ext.get_nowait()
+                return (self.now(), -1, kind, payload)
+            except queue.Empty:
+                pass
+            now = self.now()
+            if now > horizon:
+                return None
+            if self._heap:
+                delay = self._heap[0][0] - now
+                if delay <= 0:
+                    t, s, k, p = heapq.heappop(self._heap)
+                    return (max(t, now), s, k, p)
+                wait = min(delay, horizon - now)
+            elif blocked:
+                wait = horizon - now
+            else:
+                return None
+            try:
+                kind, payload = self._ext.get(timeout=max(wait, 0.0))
+                return (self.now(), -1, kind, payload)
+            except queue.Empty:
+                continue
+
+
 class ClusterRuntime:
     def __init__(
         self,
         state,
         *,
         prefill_sched=None,
-        prefill_instances: Optional[Sequence[SimPrefillInstance]] = None,
+        prefill_instances: Optional[Sequence[PrefillEngine]] = None,
         decode_sched=None,
-        decode_instances: Optional[Sequence[SimDecodeInstance]] = None,
+        decode_instances: Optional[Sequence[DecodeEngine]] = None,
         transfer_time=None,            # callable(Request) -> seconds
         snapshot_every: int = 0,
+        realtime: bool = False,
     ):
         if prefill_sched is None and decode_sched is None:
             raise ValueError("runtime needs at least one plane")
@@ -75,10 +139,12 @@ class ClusterRuntime:
         self.decode = list(decode_instances or [])
         self.transfer_time = transfer_time
         self.snapshot_every = snapshot_every
+        self.realtime = realtime
         self._dp2dinst = {d.dp_id: d.instance_id
                           for d in state.decode_dps} if self.decode else {}
         self._pass_start: Dict[int, float] = {}
         self._next_tick: Optional[float] = None
+        self._inflight = 0      # async passes/steps outstanding (realtime)
         # decode observability (Fig 7/8 timelines)
         self.kv_timeline: List[List[int]] = []
         self.batch_timeline: List[List[int]] = []
@@ -112,9 +178,15 @@ class ClusterRuntime:
             self.dsched.on_placed(placements, now)
 
     def _handoff(self, req: Request, now: float):
-        """Request enters the decode plane (fresh arrival or KV arrival)."""
-        if self.psched is not None:
-            req.first_token_time = None      # true TTFT is set by decode
+        """Request enters the decode plane (fresh arrival or KV arrival).
+
+        In the cost-model sim the decode plane emits every token, so the
+        provisional prefill-completion stamp is cleared and TTFT lands on
+        the first decode step.  On the real plane the first token was
+        PHYSICALLY produced by the prefill engine (req.generated == 1 at
+        handoff) — that stamp is the true TTFT and must survive."""
+        if self.psched is not None and req.generated == 0:
+            req.first_token_time = None      # sim: TTFT is set by decode
         req.phase = RequestPhase.DECODING
         self._place(self.dsched.on_handoff(req, now), now)
 
@@ -150,16 +222,29 @@ class ClusterRuntime:
             return self.dsched.place_redispatch(orphans, now)
         return None
 
+    def _all_settled(self, template: Sequence[Request]) -> bool:
+        return all(r.finish_time is not None
+                   or r.phase == RequestPhase.REJECTED for r in template)
+
     # -- the loop ----------------------------------------------------------
 
     def run(self, requests: Sequence[Request], duration: float, *,
             horizon: Optional[float] = None, closed_loop: int = 0) -> float:
         """Drive all planes until the heap drains or `horizon` passes.
-        Returns the final simulation clock.  `closed_loop` (decode-only
-        mode) holds that many concurrent requests: each finish admits the
-        next from the template list (paper §5.2.2)."""
-        ev = EventLoop()
+        Returns the final clock (virtual seconds, or wall seconds since
+        loop start in realtime mode).  `closed_loop` (decode-only mode)
+        holds that many concurrent requests: each finish admits the next
+        from the template list (paper §5.2.2)."""
+        ev = RealtimeEventLoop() if self.realtime else EventLoop()
+        if self.realtime:
+            for inst in itertools.chain(self.prefill, self.decode):
+                if hasattr(inst, "bind_loop"):
+                    inst.bind_loop(ev)
         self._next_tick = None
+        self._inflight = 0
+        for sched in (self.psched, self.dsched):
+            if sched is not None and hasattr(sched, "reset_clock"):
+                sched.reset_clock()     # this run's clock starts at 0
         template = list(requests)
         pool: Iterator[Request] = iter(())
         if closed_loop:
@@ -174,8 +259,16 @@ class ClusterRuntime:
         now = 0.0
         if horizon is None:
             horizon = duration * 20 + 60.0
-        while ev:
-            now, _, kind, payload = ev.pop()
+        while True:
+            if self.realtime:
+                item = ev.pop_wait(horizon, blocked=self._inflight > 0)
+                if item is None:
+                    break
+            else:
+                if not ev:
+                    break
+                item = ev.pop()
+            now, _, kind, payload = item
             if now > horizon:
                 break
             if kind == "arrival":
@@ -184,7 +277,9 @@ class ClusterRuntime:
                 else:
                     self._handoff(payload, now)
             elif kind == "pass_end":
-                inst: SimPrefillInstance = payload
+                inst: PrefillEngine = payload
+                if self.realtime:
+                    self._inflight -= 1
                 start = self._pass_start.pop(inst.instance_id)
                 res = inst.finish_pass(now)
                 for e in res.end_forwards:
@@ -199,6 +294,8 @@ class ClusterRuntime:
                 self._handoff(payload, now)
             elif kind == "step_end":
                 dinst, epoch, step_dur = payload
+                if self.realtime:
+                    self._inflight -= 1
                 if epoch != dinst.epoch:
                     pass        # stale: the instance was drained mid-step
                 else:
@@ -225,21 +322,31 @@ class ClusterRuntime:
                     self.prefill[cmd.instance_id].enqueue(cmd, now)
                 for inst in self.prefill:
                     dur = inst.start_pass(now)
-                    if dur is not None:
+                    if dur is ASYNC:
+                        self._pass_start[inst.instance_id] = now
+                        self._inflight += 1
+                    elif dur is not None:
                         self._pass_start[inst.instance_id] = now
                         ev.push(now + dur, "pass_end", inst)
             if self.dsched is not None:
                 self._place(self.dsched.poll(now), now)
                 self._place(self._redispatch_stalled(now), now)
                 for dinst in self.decode:
-                    dur = dinst.start_step(self.state.decode_dps)
-                    if dur is not None:
+                    dur = dinst.start_step(self.state.decode_dps, now)
+                    if dur is ASYNC:
+                        self._inflight += 1
+                    elif dur is not None:
                         ev.push(now + dur, "step_end",
                                 (dinst, dinst.epoch, dur))
             # wake-ups -----------------------------------------------------
             for sched in (self.psched, self.dsched):
                 if sched is not None:
                     self._schedule_tick(ev, sched.next_event_time(now), now)
+            # realtime early exit: every request settled — don't sleep out
+            # residual ticks
+            if (self.realtime and not closed_loop and template
+                    and self._inflight == 0 and self._all_settled(template)):
+                break
         return now
 
     # -- aggregate stats ---------------------------------------------------

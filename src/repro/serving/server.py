@@ -1,31 +1,42 @@
-"""Real-execution SBS server: the scheduler drives ACTUAL JAX model forwards.
+"""Real-execution SBS server: ClusterRuntime driving ACTUAL JAX forwards.
 
 This is the end-to-end integration path (used by examples/serve_e2e.py and
-the integration tests): engine threads execute true chunked prefill
-(`prefill_chunk`) and decode (`decode_step`) on a real model, report
-EndForward signals with measured wall-times, and the Algorithm-1 feedback
-loop adapts the dispatch interval online. Wall-clock here is CPU time on a
-tiny model — the control plane is identical to the production layout.
+the integration tests).  Since the EnginePlane refactor it is a thin
+deployment wrapper: the SAME `ClusterRuntime` event loop that drives the
+cost-model simulators runs here in realtime (wall-clock) mode over
+`RealPrefillEngine` / `RealDecodeEngine` threads — a P/D-separated
+deployment with true chunked prefill, an explicit KV-cache handoff
+between the pools, and continuous batched decode.  Every scheduler
+variant of the simulators (`immediate`, `sbs`, `sbs-la`) runs unchanged
+over the real plane, with EndForward signals carrying measured wall
+times so the Algorithm-1 feedback loop adapts the dispatch interval
+online.  Wall-clock here is CPU time on a tiny model — the control plane
+is identical to the production layout.
+
+The server never mutates caller-owned Request timing fields beyond the
+scheduler-written stamps: `arrival_time` stays relative to serve() start
+(the runtime clock is relative wall time), so a request list can be
+replayed across repeated serve() calls.  Repeated serve() is supported
+after a COMPLETED run: each call spawns fresh worker threads and the
+runtime resets time-gated scheduler stamps to the new clock; the adapted
+T_fwd/interval estimate deliberately persists (warm start).  After a
+timeout the deployment may still hold in-flight passes and should be
+discarded.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import List, Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
-from repro.core.scheduler import StaggeredBatchScheduler, ImmediatePrefillScheduler
-from repro.core.state import GlobalState
-from repro.core.interval import AdaptiveIntervalController
-from repro.core.types import DispatchCommand, EndForward, Request, RequestPhase
-from repro.models import decode_step, init_cache, prefill
-from repro.models.model import prefill_chunk
-from repro.serving.cluster import build_state
+from repro.core.types import Request
+from repro.serving.cluster import (
+    build_decode_scheduler, build_prefill_scheduler, build_state,
+)
+from repro.serving.real_engine import (
+    EngineSpec, KVHandoffBus, RealDecodeEngine, RealPrefillEngine,
+)
+from repro.serving.runtime import ClusterRuntime
 
 
 @dataclasses.dataclass
@@ -36,159 +47,90 @@ class Generation:
     finish: float
 
 
-class _ReqCtx:
-    def __init__(self, req: Request):
-        self.req = req
-        self.cache = None
-        self.consumed = 0
-        self.generated: List[int] = []
-        self.done = threading.Event()
-
-
-class RealInstanceEngine(threading.Thread):
-    """One inference instance: executes dispatched chunks per DP unit
-    (serially on CPU — DP parallelism is simulated by the sync-barrier cost
-    already being the max over DPs on real hardware)."""
-
-    def __init__(self, instance_id: int, cfg: ModelConfig, params,
-                 feedback: "queue.Queue[EndForward]", max_len: int = 256,
-                 max_new: int = 16):
-        super().__init__(daemon=True)
-        self.instance_id = instance_id
-        self.cfg = cfg
-        self.params = params
-        self.feedback = feedback
-        self.inbox: "queue.Queue[Optional[DispatchCommand]]" = queue.Queue()
-        self.max_len = max_len
-        self.max_new = max_new
-        self.ctx: Dict[int, _ReqCtx] = {}
-        self.results: Dict[int, Generation] = {}
-        self._chunk = jax.jit(
-            lambda p, t, c: prefill_chunk(cfg, p, t, c))
-        self._decode = jax.jit(
-            lambda p, t, c: decode_step(cfg, p, t, c))
-
-    def submit(self, cmd: DispatchCommand) -> None:
-        self.inbox.put(cmd)
-
-    def stop(self) -> None:
-        self.inbox.put(None)
-
-    def run(self) -> None:
-        while True:
-            cmd = self.inbox.get()
-            if cmd is None:
-                return
-            t0 = time.monotonic()
-            processed: Dict[int, int] = {}
-            for dp_id, lst in cmd.assignments.items():
-                ptok = 0
-                for req, tok in lst:
-                    self._process_chunk(req, tok)
-                    ptok += tok
-                processed[dp_id] = ptok
-            dur = time.monotonic() - t0
-            now = time.monotonic()
-            for dp_id, ptok in processed.items():
-                self.feedback.put(EndForward(
-                    instance_id=self.instance_id, dp_id=dp_id,
-                    exec_time=dur, processed_tokens=ptok,
-                    remaining_tokens=0, timestamp=now))
-
-    # ------------------------------------------------------------------
-    def _process_chunk(self, req: Request, tok: int) -> None:
-        ctx = self.ctx.get(req.rid)
-        if ctx is None:
-            ctx = self.ctx[req.rid] = _ReqCtx(req)
-            ctx.cache = init_cache(self.cfg, 1, self.max_len)
-        ids = req.tokens[ctx.consumed: ctx.consumed + tok]
-        if not ids:
-            return
-        arr = jnp.asarray([ids], jnp.int32)
-        logits, ctx.cache = self._chunk(self.params, arr, ctx.cache)
-        ctx.consumed += tok
-        if ctx.consumed >= req.input_len:
-            # prefill complete: emit first token, then decode to completion
-            if req.prefill_start is None:
-                req.prefill_start = time.monotonic()
-            nxt = int(jnp.argmax(logits[0]))
-            ctx.generated.append(nxt)
-            req.first_token_time = time.monotonic()
-            n_new = min(req.output_len, self.max_new)
-            for _ in range(n_new - 1):
-                lg, ctx.cache = self._decode(
-                    self.params, jnp.asarray([[nxt]], jnp.int32), ctx.cache)
-                nxt = int(jnp.argmax(lg[0]))
-                ctx.generated.append(nxt)
-            req.finish_time = time.monotonic()
-            req.phase = RequestPhase.FINISHED
-            self.results[req.rid] = Generation(
-                rid=req.rid, tokens=list(ctx.generated),
-                ttft=req.first_token_time - req.arrival_time,
-                finish=req.finish_time)
-            ctx.done.set()
+def _default_serving_config() -> ServingConfig:
+    return ServingConfig(
+        num_prefill_instances=2, prefill_dp_per_instance=2,
+        num_decode_instances=1, decode_dp_per_instance=2,
+        chunk_size=32, t_default=0.05, l_net=0.001,
+        max_batch_per_dp=8)
 
 
 class RealSBSServer:
-    """SBS control plane over real engines."""
+    """SBS control plane over real engines.
+
+    scheduler ∈ {sbs, sbs-la, immediate}: identical meaning to
+    `PDClusterSim` — 'sbs-la' keeps SBS prefill dispatch and switches the
+    decode pool to Load-Aware Global Allocation; 'immediate' is the
+    baseline on both phases."""
 
     def __init__(self, cfg: ModelConfig, params,
                  serving_cfg: Optional[ServingConfig] = None,
                  scheduler: str = "sbs", max_len: int = 256,
-                 max_new: int = 8):
+                 max_new: int = 8,
+                 watchdog_multiplier: float = 0.0,
+                 spec: Optional[EngineSpec] = None):
         self.cfg = cfg
-        scfg = serving_cfg or ServingConfig(
-            num_prefill_instances=2, prefill_dp_per_instance=2,
-            chunk_size=32, t_default=0.05, l_net=0.001)
+        scfg = serving_cfg or _default_serving_config()
         self.scfg = scfg
         self.state = build_state(scfg)
-        if scheduler == "sbs":
-            self.sched = StaggeredBatchScheduler(self.state,
-                                                 n_limit=scfg.n_limit)
+        if scheduler in ("sbs", "sbs-la"):
+            self.sched = build_prefill_scheduler(self.state, scfg, "sbs")
+        elif scheduler == "immediate":
+            self.sched = build_prefill_scheduler(self.state, scfg,
+                                                 "immediate-rr")
         else:
-            self.sched = ImmediatePrefillScheduler(self.state)
-        self.feedback: "queue.Queue[EndForward]" = queue.Queue()
+            raise ValueError(scheduler)
+        self.dsched = build_decode_scheduler(
+            self.state, scfg, scheduler,
+            watchdog_multiplier=watchdog_multiplier)
+        # a spec may be shared across server instances (e.g. one per
+        # scheduler variant over the same model) so each jitted shape
+        # compiles once per process instead of once per server
+        self.spec = spec or EngineSpec(cfg, params, max_len=max_len,
+                                       max_batch=scfg.max_batch_per_dp,
+                                       max_new=max_new)
+        self.bus = KVHandoffBus()
         self.engines = [
-            RealInstanceEngine(i, cfg, params, self.feedback,
-                               max_len=max_len, max_new=max_new)
+            RealPrefillEngine(
+                i, [d.dp_id for d in self.state.prefill_dps_of(i)],
+                scfg.chunk_size, self.spec, self.bus)
             for i in range(scfg.num_prefill_instances)]
+        self.decode_engines = [
+            RealDecodeEngine(
+                i, [d.dp_id for d in self.state.decode_dps_of(i)],
+                self.spec, self.bus)
+            for i in range(scfg.num_decode_instances)]
+        self.runtime = ClusterRuntime(
+            self.state, prefill_sched=self.sched,
+            prefill_instances=self.engines,
+            decode_sched=self.dsched, decode_instances=self.decode_engines,
+            transfer_time=lambda r: scfg.l_net,     # P/D transfer latency
+            realtime=True)
 
     def serve(self, requests: Sequence[Request], timeout: float = 120.0
               ) -> List[Generation]:
-        for e in self.engines:
+        for r in requests:
+            if r.tokens is None or len(r.tokens) < r.input_len:
+                raise ValueError(
+                    f"request {r.rid}: the real plane needs `tokens` of "
+                    f"length >= input_len")
+        workers = [*self.engines, *self.decode_engines]
+        for e in workers:
             e.start()
-        t_start = time.monotonic()
-        reqs = sorted(requests, key=lambda r: r.arrival_time)
-        pending = list(reqs)
-        deadline = t_start + timeout
         try:
-            while time.monotonic() < deadline:
-                now = time.monotonic()
-                rel = now - t_start
-                # admit arrivals whose time has come
-                while pending and pending[0].arrival_time <= rel:
-                    r = pending.pop(0)
-                    r.arrival_time = t_start + r.arrival_time  # absolute
-                    self.sched.on_arrival(r, now)
-                # feedback fast path
-                try:
-                    while True:
-                        ev = self.feedback.get_nowait()
-                        self.sched.on_end_forward(ev)
-                except queue.Empty:
-                    pass
-                for cmd in self.sched.poll(now):
-                    self.engines[cmd.instance_id].submit(cmd)
-                done = sum(len(e.results) for e in self.engines)
-                if done == len(reqs):
-                    break
-                time.sleep(0.002)
+            self.runtime.run(requests, duration=timeout, horizon=timeout)
         finally:
-            for e in self.engines:
+            for e in workers:
                 e.stop()
-            for e in self.engines:
-                e.join(timeout=10)
+            for e in workers:
+                e.join_worker(timeout=10)
         out: List[Generation] = []
-        for e in self.engines:
-            out.extend(e.results.values())
+        for r in requests:
+            gen = self.bus.get(r.rid)
+            if gen is None or r.finish_time is None:
+                continue        # unfinished within the timeout
+            out.append(Generation(
+                rid=r.rid, tokens=list(gen.tokens),
+                ttft=r.ttft if r.ttft is not None else float("nan"),
+                finish=r.finish_time))
         return sorted(out, key=lambda g: g.rid)

@@ -1,0 +1,263 @@
+"""The real engine plane behind the unified ClusterRuntime:
+
+  * token-level equivalence of continuous batched decode (padded batch
+    cache + join/leave) against the seed per-request serial decode
+  * cache_take/cache_join round trip (the watchdog migration path)
+  * conservation + completion invariants of the real P/D handoff under
+    `sbs` and `sbs-la`, including the satellite regressions:
+      - prefill_start stamped when the first chunk STARTS (not at
+        prefill completion)
+      - serve() leaves caller-owned Request.arrival_time untouched
+"""
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ServingConfig, get_arch
+from repro.core.types import Request
+from repro.models import (
+    cache_join, cache_take, decode_step, init_cache, init_params,
+    prefill_chunk,
+)
+from repro.serving.real_engine import EngineSpec
+from repro.serving.runtime import ClusterRuntime
+from repro.serving.server import RealSBSServer
+
+MAX_LEN = 96
+N_NEW = 5
+
+
+@pytest.fixture(scope="module")
+def tiny_dense():
+    cfg = get_arch("deepseek-7b", reduced=True)   # dense: exact equivalence
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _chunked_prefill(cfg, params, ids, chunk=16):
+    """The seed server's prefill algorithm: batch-1 chunked KV build."""
+    cache = init_cache(cfg, 1, MAX_LEN)
+    logits = None
+    for i in range(0, len(ids), chunk):
+        arr = jnp.asarray([ids[i:i + chunk]], jnp.int32)
+        logits, cache = prefill_chunk(cfg, params, arr, cache)
+    return int(jnp.argmax(logits[0])), cache
+
+
+def _serial_decode(cfg, params, t0, cache, n):
+    """The seed server's decode loop: batch-of-1, token by token."""
+    toks = [t0]
+    for _ in range(n - 1):
+        lg, cache = decode_step(cfg, params,
+                                jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks, cache
+
+
+# ---------------------------------------------------------------------------
+# Batched continuous decode == seed serial decode
+# ---------------------------------------------------------------------------
+
+def test_batched_continuous_decode_matches_serial(tiny_dense):
+    """Requests joining a padded batch cache at different steps (continuous
+    batching) must generate exactly the tokens of the seed per-request
+    serial decode."""
+    cfg, params = tiny_dense
+    rng = random.Random(0)
+    prompts = [[rng.randrange(cfg.vocab_size) for _ in range(L)]
+               for L in (23, 37, 11)]
+    serial, handoffs = [], []
+    for ids in prompts:
+        t0, cache = _chunked_prefill(cfg, params, ids)
+        serial.append(_serial_decode(cfg, params, t0, cache, N_NEW)[0])
+        handoffs.append((t0, cache))
+
+    B = 4
+    bc = init_cache(cfg, B, MAX_LEN)
+    # join-on-handoff: r0/r1 up front, r2 joins two steps later
+    toks = {}
+    next_tok = [0] * B
+    for slot, ridx in ((0, 0), (2, 1)):
+        t0, cache = handoffs[ridx]
+        bc = cache_join(bc, cache, slot)
+        toks[slot] = [t0]
+        next_tok[slot] = t0
+    slot_of = {0: 0, 1: 2}                       # request idx -> slot
+    for step in range(N_NEW + 2):
+        if step == 2:
+            t0, cache = handoffs[2]
+            bc = cache_join(bc, cache, 1)        # late join into a free slot
+            toks[1] = [t0]
+            next_tok[1] = t0
+            slot_of[2] = 1
+        active = [s for s in toks if len(toks[s]) < N_NEW]
+        if not active:
+            break
+        lg, bc = decode_step(cfg, params,
+                             jnp.asarray([[t] for t in next_tok], jnp.int32),
+                             bc)
+        nxt = jnp.argmax(lg, axis=-1)
+        for s in active:                         # leave-on-finish: inactive
+            t = int(nxt[s])                      # slots just step on garbage
+            toks[s].append(t)
+            next_tok[s] = t
+    batched = [toks[slot_of[i]] for i in range(3)]
+    assert batched == serial
+
+
+def test_cache_take_roundtrip_continues_serial(tiny_dense):
+    """cache_take (watchdog migration) must extract a slot that continues
+    generating exactly like the never-batched serial cache."""
+    cfg, params = tiny_dense
+    rng = random.Random(1)
+    ids = [rng.randrange(cfg.vocab_size) for _ in range(29)]
+    t0, cache = _chunked_prefill(cfg, params, ids)
+    serial, _ = _serial_decode(cfg, params, t0, cache, 6)
+
+    bc = init_cache(cfg, 3, MAX_LEN)
+    bc = cache_join(bc, cache, 1)
+    toks = [t0]
+    next_tok = [0, t0, 0]
+    for _ in range(2):                           # two batched steps...
+        lg, bc = decode_step(cfg, params,
+                             jnp.asarray([[t] for t in next_tok], jnp.int32),
+                             bc)
+        t = int(jnp.argmax(lg[1]))
+        toks.append(t)
+        next_tok[1] = t
+    taken = cache_take(bc, 1)                    # ...then migrate out
+    rest, _ = _serial_decode(cfg, params, toks[-1], taken, 4)
+    assert toks + rest[1:] == serial
+
+
+# ---------------------------------------------------------------------------
+# Real P/D handoff through ClusterRuntime
+# ---------------------------------------------------------------------------
+
+def _mk_requests(cfg, n=4, out_len=3, seed=0):
+    rng = random.Random(seed)
+    reqs = []
+    for i in range(n):
+        L = rng.randrange(16, 48)
+        reqs.append(Request(
+            rid=i, arrival_time=i * 0.02, input_len=L, output_len=out_len,
+            tokens=tuple(rng.randrange(cfg.vocab_size) for _ in range(L))))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def shared_spec(tiny_dense):
+    cfg, params = tiny_dense
+    return EngineSpec(cfg, params, max_len=MAX_LEN, max_batch=8, max_new=3)
+
+
+@pytest.mark.parametrize("scheduler", ["sbs", "sbs-la"])
+def test_real_pd_handoff_conserves_and_completes(tiny_dense, shared_spec,
+                                                 scheduler):
+    cfg, params = tiny_dense
+    reqs = _mk_requests(cfg)
+    arrivals = [r.arrival_time for r in reqs]
+    srv = RealSBSServer(cfg, params, scheduler=scheduler, max_len=MAX_LEN,
+                        max_new=3, spec=shared_spec)
+    assert isinstance(srv.runtime, ClusterRuntime)   # one driver, both planes
+    gens = srv.serve(reqs, timeout=120)
+
+    # completion: every request finishes exactly once with its full output
+    assert sorted(g.rid for g in gens) == [r.rid for r in reqs]
+    for g, r in zip(gens, reqs):
+        assert len(g.tokens) == r.output_len
+        assert r.generated == r.output_len
+    # timestamps: dispatch -> first chunk start -> first token -> finish,
+    # with prefill_start stamped at chunk START (satellite regression)
+    for r in reqs:
+        assert r.prefill_start is not None
+        assert r.dispatch_time <= r.prefill_start <= r.first_token_time
+        assert r.arrival_time <= r.first_token_time <= r.finish_time
+    # caller-owned arrival times are never rewritten (satellite regression)
+    assert [r.arrival_time for r in reqs] == arrivals
+    # conservation: decode accounting fully drained, tokens additive
+    assert sum(d.kv_tokens for d in srv.state.decode_dps) == 0
+    assert sum(d.batch for d in srv.state.decode_dps) == 0
+    decoded = sum(e.tokens_generated for e in srv.decode_engines)
+    # the first token of each request is emitted by the prefill plane
+    assert decoded == sum(r.output_len - 1 for r in reqs)
+    prefilled = sum(e.tokens_processed for e in srv.engines)
+    assert prefilled == sum(r.input_len for r in reqs)
+
+
+def test_worker_error_surfaces_promptly(tiny_dense):
+    """A failing forward on an engine worker thread must raise out of
+    serve() immediately, not leave the runtime blocked until the
+    timeout horizon."""
+    cfg, params = tiny_dense
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN, max_batch=4, max_new=3)
+
+    def boom(p, t, c):
+        raise RuntimeError("boom")
+
+    spec.jit_prefill_chunk = boom
+    srv = RealSBSServer(cfg, params, scheduler="sbs", max_len=MAX_LEN,
+                        max_new=3, spec=spec)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="boom"):
+        srv.serve(_mk_requests(cfg, n=2), timeout=60)
+    assert time.monotonic() - t0 < 30
+
+
+def test_real_ttft_stamped_at_prefill_completion(tiny_dense, shared_spec):
+    """On the real plane the first token is produced by the prefill
+    engine: its stamp must survive the handoff (TTFT is NOT deferred to
+    the first batched decode step, which emits token #2)."""
+    cfg, params = tiny_dense
+    reqs = _mk_requests(cfg, n=3, seed=3)
+    srv = RealSBSServer(cfg, params, scheduler="sbs", max_len=MAX_LEN,
+                        max_new=3, spec=shared_spec)
+    step_times = []
+    for eng in srv.decode_engines:          # record decode step completions
+        orig = eng.finish_step
+        eng.finish_step = (lambda now, dps, _o=orig:
+                           (step_times.append(now), _o(now, dps))[1])
+    gens = srv.serve(reqs, timeout=120)
+    assert len(gens) == 3
+    for r in reqs:
+        # the stamp is a prefill pass_end, never a decode step_end (the
+        # old behavior re-stamped TTFT at a decode step completion)
+        assert r.first_token_time not in step_times
+        assert r.first_token_time < r.finish_time
+        # and it precedes every decode step this request participated in
+        assert any(r.first_token_time < t for t in step_times)
+
+
+def test_real_immediate_baseline_completes(tiny_dense, shared_spec):
+    """The immediate baseline runs over the same plane unchanged."""
+    cfg, params = tiny_dense
+    reqs = _mk_requests(cfg, n=3, seed=2)
+    srv = RealSBSServer(cfg, params, scheduler="immediate", max_len=MAX_LEN,
+                        max_new=3, spec=shared_spec)
+    gens = srv.serve(reqs, timeout=120)
+    assert len(gens) == 3
+    assert all(len(g.tokens) == 3 for g in gens)
+
+
+def test_repeated_serve_completes_without_timeline_stall(tiny_dense,
+                                                         shared_spec):
+    """serve() may be called repeatedly on one server: the runtime resets
+    time-gated scheduler stamps (reset_clock) so a second run is not
+    stalled by the previous run's timeline.  The adaptive T_fwd estimate
+    deliberately persists (warm start), so run 2 is only required to be
+    correct and no slower than run 1 — not instant."""
+    cfg, params = tiny_dense
+    srv = RealSBSServer(cfg, params, scheduler="sbs", max_len=MAX_LEN,
+                        max_new=3, spec=shared_spec)
+    t0 = time.monotonic()
+    g1 = srv.serve(_mk_requests(cfg, seed=4), timeout=120)
+    d1 = time.monotonic() - t0
+    t0 = time.monotonic()
+    g2 = srv.serve(_mk_requests(cfg, seed=4), timeout=120)
+    d2 = time.monotonic() - t0
+    assert len(g1) == len(g2) == 4
+    assert [g.tokens for g in g1] == [g.tokens for g in g2]
+    assert d2 <= d1 + 1.0
