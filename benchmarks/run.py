@@ -68,8 +68,18 @@ def main() -> None:
             print(f"--json: no payload collected (run the e2e_pd bench)",
                   file=sys.stderr)
             sys.exit(1)
+        # merge over the existing file: sections owned by other writers
+        # (e.g. the real-plane smoke's `real_plane`) survive a sim rerun
+        merged = {}
+        if os.path.exists(JSON_PATH):
+            try:
+                with open(JSON_PATH) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+        merged.update(payload)
         with open(JSON_PATH, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
+            json.dump(merged, f, indent=2, sort_keys=True)
         print(f"\nwrote {os.path.abspath(JSON_PATH)}")
     print(f"\n{'='*72}\n== CSV ==\n{'='*72}")
     for line in csv:

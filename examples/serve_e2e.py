@@ -1,17 +1,25 @@
 """End-to-end driver: serve a small model through the REAL P/D-separated
 SBS control plane — ClusterRuntime in realtime mode drives threaded
 engines executing true chunked prefill, KV-cache handoff, and continuous
-batched decode on jitted JAX forwards; EndForward feedback adapts the
-dispatch interval online.  Runs every scheduler variant over the same
-request set and reports per-request TTFT.
+batched decode (paged block-table KV by default) on jitted JAX forwards;
+EndForward feedback adapts the dispatch interval online.  Runs every
+scheduler variant over the same request set and reports per-request TTFT
+plus the decode plane's peak concurrent residency.
 
     PYTHONPATH=src python examples/serve_e2e.py [--requests 8] [--arch ID]
         [--schedulers immediate,sbs,sbs-la] [--timeout 120]
+        [--block-size 16] [--compare-padded] [--bench-json BENCH_e2e.json]
 
-Exits non-zero if any request fails to finish within the timeout (used
-by `scripts/ci.sh --real-smoke`).
+`--compare-padded` re-runs the sweep with padded max_len slots at the
+SAME KV memory budget and requires the paged plane to sustain strictly
+more concurrent decode requests; `--bench-json` records the comparison
+in the bench payload's `real_plane` section.  Exits non-zero if any
+request fails to finish within the timeout, or if the paged plane does
+not win the comparison (used by `scripts/ci.sh --real-smoke`).
 """
 import argparse
+import json
+import os
 import random
 import sys
 
@@ -23,17 +31,58 @@ from repro.models import init_params
 from repro.serving.real_engine import EngineSpec
 from repro.serving.server import RealSBSServer
 
+MAX_LEN = 160
 
-def make_requests(n, cfg, max_new, seed):
+
+def make_requests(n, cfg, max_new, seed, spacing):
     rng = random.Random(seed)
     lens = [rng.randrange(20, 90) for _ in range(n)]
     toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(L))
             for L in lens]
     # fresh Request objects per serve() call (timing stamps are per-run)
     return lambda: [
-        Request(rid=i, arrival_time=i * 0.05, input_len=lens[i],
+        Request(rid=i, arrival_time=i * spacing, input_len=lens[i],
                 output_len=max_new, tokens=toks[i])
         for i in range(n)]
+
+
+def run_sweep(label, cfg, params, scfg, fresh, args):
+    """One scheduler sweep over one cache backend; returns (ok, peaks)."""
+    print(f"\n#### backend={label}: "
+          f"{scfg.num_prefill_instances}P x {scfg.prefill_dp_per_instance}DP"
+          f" -> {scfg.num_decode_instances}D x {scfg.decode_dp_per_instance}"
+          f"DP, chunk={scfg.chunk_size}, "
+          + (f"paged block_size={scfg.block_size} "
+             f"slots/DP={scfg.resolved_decode_slots}" if scfg.block_size
+             else f"padded slots/DP={scfg.max_batch_per_dp}"))
+    # one shared spec per backend: each jitted chunk/step shape compiles
+    # once for the whole scheduler sweep
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN,
+                      max_batch=scfg.max_batch_per_dp, max_new=args.max_new,
+                      block_size=scfg.block_size,
+                      decode_slots=(scfg.resolved_decode_slots
+                                    if scfg.block_size else 0))
+    ok = True
+    peaks = {}
+    for sched in args.schedulers.split(","):
+        reqs = fresh()
+        srv = RealSBSServer(cfg, params, serving_cfg=scfg, scheduler=sched,
+                            max_len=MAX_LEN, max_new=args.max_new, spec=spec)
+        gens = srv.serve(reqs, timeout=args.timeout)
+        peak = max((e.peak_resident for e in srv.decode_engines), default=0)
+        peaks[sched] = peak
+        print(f"\n== scheduler={sched}: {len(gens)}/{len(reqs)} finished; "
+              f"adapted I_opt={srv.state.interval.interval*1000:.1f}ms "
+              f"T_fwd={srv.state.interval.t_fwd*1000:.1f}ms "
+              f"peak_decode_resident={peak}")
+        for g in gens:
+            print(f"  rid={g.rid} ttft={g.ttft*1000:7.1f}ms tokens={g.tokens}")
+        if len(gens) < len(reqs):
+            missing = sorted(set(r.rid for r in reqs)
+                             - set(g.rid for g in gens))
+            print(f"  UNFINISHED rids: {missing}")
+            ok = False
+    return ok, peaks
 
 
 def main():
@@ -44,40 +93,70 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--timeout", type=float, default=120.0)
     ap.add_argument("--schedulers", default="immediate,sbs,sbs-la")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-KV block size; 0 = padded max_len slots")
+    ap.add_argument("--max-batch-per-dp", type=int, default=8,
+                    help="decode KV memory budget per DP, in max_len slots")
+    ap.add_argument("--arrival-spacing", type=float, default=0.05)
+    ap.add_argument("--compare-padded", action="store_true",
+                    help="also run padded slots at equal memory and demand "
+                         "strictly higher paged decode concurrency")
+    ap.add_argument("--bench-json", default=None,
+                    help="record the real-plane comparison into this "
+                         "benchmark payload (e.g. BENCH_e2e.json)")
     args = ap.parse_args()
+    if args.compare_padded and not args.block_size:
+        ap.error("--compare-padded needs a paged plane (--block-size > 0); "
+                 "with --block-size 0 the concurrency gate would silently "
+                 "not run")
 
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    fresh = make_requests(args.requests, cfg, args.max_new, args.seed)
+    fresh = make_requests(args.requests, cfg, args.max_new, args.seed,
+                          args.arrival_spacing)
+    print(f"serving {args.requests} requests on {cfg.name}")
 
-    scfg = ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=2,
-                         num_decode_instances=1, decode_dp_per_instance=2,
-                         chunk_size=32, t_default=0.05, l_net=0.001,
-                         max_batch_per_dp=8)
-    print(f"serving {args.requests} requests on {cfg.name} "
-          f"({scfg.num_prefill_instances}P x {scfg.prefill_dp_per_instance}DP"
-          f" -> {scfg.num_decode_instances}D x {scfg.decode_dp_per_instance}DP,"
-          f" chunk={scfg.chunk_size})")
-    # one shared spec: each jitted chunk/step shape compiles once for the
-    # whole scheduler sweep
-    spec = EngineSpec(cfg, params, max_len=160,
-                      max_batch=scfg.max_batch_per_dp, max_new=args.max_new)
-    ok = True
-    for sched in args.schedulers.split(","):
-        reqs = fresh()
-        srv = RealSBSServer(cfg, params, serving_cfg=scfg, scheduler=sched,
-                            max_len=160, max_new=args.max_new, spec=spec)
-        gens = srv.serve(reqs, timeout=args.timeout)
-        print(f"\n== scheduler={sched}: {len(gens)}/{len(reqs)} finished; "
-              f"adapted I_opt={srv.state.interval.interval*1000:.1f}ms "
-              f"T_fwd={srv.state.interval.t_fwd*1000:.1f}ms")
-        for g in gens:
-            print(f"  rid={g.rid} ttft={g.ttft*1000:7.1f}ms tokens={g.tokens}")
-        if len(gens) < len(reqs):
-            missing = sorted(set(r.rid for r in reqs)
-                             - set(g.rid for g in gens))
-            print(f"  UNFINISHED rids: {missing}")
-            ok = False
+    def scfg_for(block_size):
+        return ServingConfig(
+            num_prefill_instances=2, prefill_dp_per_instance=2,
+            num_decode_instances=1, decode_dp_per_instance=2,
+            chunk_size=32, t_default=0.05, l_net=0.001,
+            max_batch_per_dp=args.max_batch_per_dp, block_size=block_size)
+
+    label = "paged" if args.block_size else "padded"
+    ok, peaks = run_sweep(label, cfg, params, scfg_for(args.block_size),
+                          fresh, args)
+    report = {"block_size": args.block_size,
+              "max_batch_per_dp": args.max_batch_per_dp,
+              "peak_decode_resident": {label: peaks}}
+
+    if args.compare_padded and args.block_size:
+        ok2, padded_peaks = run_sweep("padded", cfg, params, scfg_for(0),
+                                      fresh, args)
+        ok = ok and ok2
+        report["peak_decode_resident"]["padded"] = padded_peaks
+        print("\n#### paged vs padded peak concurrent decode requests "
+              "(equal KV memory)")
+        for sched in peaks:
+            p, q = peaks[sched], padded_peaks[sched]
+            verdict = "OK" if p > q else "NOT STRICTLY HIGHER"
+            print(f"  {sched:>10}: paged={p} padded={q}  {verdict}")
+            if p <= q:
+                ok = False
+
+    if args.bench_json:
+        payload = {}
+        if os.path.exists(args.bench_json):
+            try:
+                with open(args.bench_json) as f:
+                    payload = json.load(f)
+            except (OSError, ValueError):
+                payload = {}        # corrupt/truncated: rebuild our section
+        payload["real_plane"] = report
+        with open(args.bench_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\nupdated {os.path.abspath(args.bench_json)} [real_plane]")
+
     if not ok:
         sys.exit(1)
 

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Bench regression guard: compare a fresh BENCH_e2e.json against the
+committed baseline and fail on a large TTFT-p99 or throughput regression
+for any (scenario, qps, scheduler) pair present in both files.
+
+    python scripts/check_bench_regression.py BASELINE FRESH [--threshold 0.25]
+
+Only metric dicts carrying both `ttft_p99` and `throughput` are compared
+(auxiliary payload sections such as `real_plane` / `paged_concurrency`
+are informational and skipped).  The sims are deterministic, so the
+threshold guards real scheduling/cost-model regressions, not noise —
+but --quick baselines must be compared against --quick runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, Tuple
+
+
+def metric_rows(payload: Dict, path: Tuple[str, ...] = ()
+                ) -> Iterator[Tuple[Tuple[str, ...], Dict]]:
+    """Yield every (path, metrics) dict holding ttft_p99 + throughput."""
+    if not isinstance(payload, dict):
+        return
+    if "ttft_p99" in payload and "throughput" in payload:
+        yield path, payload
+        return
+    for key, val in payload.items():
+        yield from metric_rows(val, path + (str(key),))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional regression (default 25%)")
+    ap.add_argument("--section", default=None,
+                    help="compare only this top-level payload section "
+                         "(e.g. e2e_quick) — restricts the guard to rows "
+                         "the fresh run actually regenerated instead of "
+                         "passthrough data merged from the existing file")
+    args = ap.parse_args()
+
+    def load(path):
+        with open(path) as f:
+            payload = json.load(f)
+        if args.section is not None:
+            payload = {args.section: payload.get(args.section, {})}
+        return dict(metric_rows(payload))
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+
+    if not base:
+        # a baseline with no comparable rows (e.g. it predates the
+        # requested section / schema) cannot regress — skip, don't fail:
+        # the very first run after a schema migration must stay green
+        print("bench-guard: baseline has no comparable rows"
+              + (f" for section {args.section!r}" if args.section else "")
+              + "; guard skipped")
+        return 0
+    if not fresh:
+        print("bench-guard: fresh payload has no comparable rows — the "
+              "run produced nothing to judge", file=sys.stderr)
+        return 1
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print("bench-guard: no overlapping (scenario,qps,scheduler) pairs "
+              "between baseline and fresh payloads", file=sys.stderr)
+        return 1
+
+    failures = []
+    print(f"bench-guard: {len(shared)} pairs, threshold "
+          f"{args.threshold:.0%}")
+    for path in shared:
+        b, f_ = base[path], fresh[path]
+        name = "/".join(path)
+        ttft_ratio = (f_["ttft_p99"] / b["ttft_p99"]
+                      if b["ttft_p99"] > 0 else 1.0)
+        thr_ratio = (f_["throughput"] / b["throughput"]
+                     if b["throughput"] > 0 else 1.0)
+        verdicts = []
+        if ttft_ratio > 1.0 + args.threshold:
+            verdicts.append(f"ttft_p99 {ttft_ratio - 1:+.1%}")
+        if thr_ratio < 1.0 - args.threshold:
+            verdicts.append(f"throughput {thr_ratio - 1:+.1%}")
+        status = "FAIL " + ", ".join(verdicts) if verdicts else "ok"
+        print(f"  {name:<44} ttft_p99 x{ttft_ratio:.3f} "
+              f"thr x{thr_ratio:.3f}  {status}")
+        if verdicts:
+            failures.append((name, verdicts))
+
+    if failures:
+        print(f"bench-guard: {len(failures)} regressed pair(s) beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("bench-guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

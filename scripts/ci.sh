@@ -1,25 +1,39 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 entry point.
 #
-#   scripts/ci.sh               fast tier-1: full suite minus @slow model
-#                               cases + benchmark smoke (microbench + quick
-#                               e2e_pd emitting BENCH_e2e.json)
-#   scripts/ci.sh --full        everything, including @slow cases
-#                               (equivalent to the ROADMAP tier-1 command
+#   scripts/ci.sh               fast tier-1: the @paged property suite
+#                               (block allocator + cache surgery) first,
+#                               then the full suite minus @slow model
+#                               cases, then the benchmark smoke
+#                               (microbench + quick e2e_pd emitting
+#                               BENCH_e2e.json) guarded against the
+#                               committed baseline (>25% TTFT-p99 or
+#                               throughput regression fails)
+#   scripts/ci.sh --full        everything, including @slow cases (the
+#                               cross-plane sim/real × padded/paged
+#                               equivalence sweep lives here;
+#                               equivalent to the ROADMAP tier-1 command
 #                               `pytest -x -q`)
-#   scripts/ci.sh --real-smoke  real-engine smoke only: examples/serve_e2e.py
-#                               on a tiny config through the REAL P/D
-#                               ClusterRuntime plane, 60s budget, failing on
-#                               any unfinished request
+#   scripts/ci.sh --real-smoke  real-engine smoke: examples/serve_e2e.py
+#                               through the REAL P/D ClusterRuntime plane
+#                               with the paged KV cache, compared against
+#                               padded slots at equal memory — fails on
+#                               any unfinished request or if paged does
+#                               not sustain strictly higher concurrent
+#                               decode; records the result in
+#                               BENCH_e2e.json [real_plane]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [[ "${1:-}" == "--real-smoke" ]]; then
-    echo "== real-engine smoke (serve_e2e, 60s budget) =="
-    PYTHONPATH=src timeout 60 python examples/serve_e2e.py \
-        --arch granite-moe-1b-a400m --requests 4 --max-new 3 \
-        --schedulers sbs-la --timeout 55 \
-        || { echo "real smoke FAILED (unfinished requests or >60s)" >&2
+    echo "== real-engine smoke (serve_e2e paged vs padded, 150s budget) =="
+    PYTHONPATH=src timeout 150 python examples/serve_e2e.py \
+        --arch granite-moe-1b-a400m --requests 10 --max-new 12 \
+        --max-batch-per-dp 1 --arrival-spacing 0 \
+        --schedulers sbs-la --timeout 110 --compare-padded \
+        --bench-json BENCH_e2e.json \
+        || { echo "real smoke FAILED (unfinished requests, paged <= padded" \
+                  "concurrency, or >150s)" >&2
              exit 1; }
     echo "REAL SMOKE OK"
     exit 0
@@ -29,7 +43,11 @@ echo "== tier-1 tests =="
 if [[ "${1:-}" == "--full" ]]; then
     PYTHONPATH=src python -m pytest -q
 else
-    PYTHONPATH=src python -m pytest -q -m "not slow"
+    # paged KV property suite first (fail fast on the newest subsystem),
+    # then everything else; @slow — including the heavyweight cross-plane
+    # equivalence sweep — stays behind --full
+    PYTHONPATH=src python -m pytest -q -m "paged and not slow"
+    PYTHONPATH=src python -m pytest -q -m "not slow and not paged"
 fi
 
 echo "== benchmark smoke (microbench) =="
@@ -41,10 +59,25 @@ if grep -q "BENCH FAILED" <<<"$out"; then
 fi
 
 echo "== benchmark smoke (e2e_pd --quick --json -> BENCH_e2e.json) =="
+baseline=""
+if git show HEAD:BENCH_e2e.json >/tmp/bench_baseline.json 2>/dev/null; then
+    baseline=/tmp/bench_baseline.json
+fi
 out=$(PYTHONPATH=src:. python benchmarks/run.py --only e2e_pd --quick --json)
 echo "$out"
 if grep -q "BENCH FAILED" <<<"$out" || [[ ! -s BENCH_e2e.json ]]; then
     echo "e2e_pd smoke FAILED (no BENCH_e2e.json)" >&2
     exit 1
+fi
+
+echo "== bench regression guard (fresh --quick vs committed baseline) =="
+if [[ -n "$baseline" ]]; then
+    # --section e2e_quick: only the rows this --quick run regenerated are
+    # judged (e2e_full rows in the working tree are passthrough data)
+    python scripts/check_bench_regression.py "$baseline" BENCH_e2e.json \
+        --threshold 0.25 --section e2e_quick \
+        || { echo "bench regression guard FAILED" >&2; exit 1; }
+else
+    echo "no committed BENCH_e2e.json baseline; guard skipped"
 fi
 echo "CI OK"

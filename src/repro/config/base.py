@@ -210,6 +210,13 @@ class ParallelConfig:
     zero1: bool = True                         # shard optimizer state on data
 
 
+# default paged batch rows per padded-equivalent slot: the ONE source of
+# the 2× rule — ServingConfig.resolved_decode_slots (scheduler admission)
+# and EngineSpec.paged_slots (engine batch rows) both derive from it, so
+# the scheduler can never hand out more slots than the engine allocates
+PAGED_SLOTS_FACTOR = 2
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """SBS scheduler + cluster parameters (paper §4 / §5)."""
@@ -233,6 +240,34 @@ class ServingConfig:
     # decode capacity
     max_batch_per_dp: int = 64
     kv_budget_tokens: int = 200_000         # per-DP KV token budget
+    # paged KV cache (0 = padded max_len slots).  With paging on, decode
+    # admission is gated by free KV *blocks* (block_size tokens each)
+    # instead of free slots, so a DP holds more concurrent requests at
+    # the same memory budget; max_batch_per_dp keeps its meaning as the
+    # padded-equivalent memory budget (slots × max_len tokens).
+    block_size: int = 0
+    decode_slots_per_dp: int = 0            # 0 => auto (see resolved_decode_slots)
+
+    def __post_init__(self):
+        if self.decode_slots_per_dp and not self.block_size:
+            # paged-only knob: on the padded plane slots ARE the memory
+            # (max_batch_per_dp × max_len), so a divergent slot count
+            # would let the scheduler admit more than engines allocate
+            raise ValueError(
+                "decode_slots_per_dp requires block_size > 0 (padded "
+                "slots are fixed by max_batch_per_dp)")
+
+    @property
+    def resolved_decode_slots(self) -> int:
+        """Batch rows per decode DP.  Padded: one row per max_len slot
+        (max_batch_per_dp).  Paged: default PAGED_SLOTS_FACTOR× — rows
+        are cheap (the KV memory lives in the shared block pool), the
+        real gate is the free-block count."""
+        if self.decode_slots_per_dp:
+            return self.decode_slots_per_dp
+        if self.block_size:
+            return self.max_batch_per_dp * PAGED_SLOTS_FACTOR
+        return self.max_batch_per_dp
 
 
 @dataclasses.dataclass(frozen=True)

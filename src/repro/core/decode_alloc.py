@@ -34,14 +34,17 @@ def percentile(values: Sequence[float], q: float) -> float:
 
 def iqr_safe_set(units: Sequence[DecodeDPState], k: float = 1.5
                  ) -> List[DecodeDPState]:
-    """Step 1 — outlier detection over the KV-load snapshot."""
-    kv = [u.kv_tokens for u in units]
+    """Step 1 — outlier detection over the KV-load snapshot.  The load
+    metric is `kv_occupancy`: identical to kv_tokens on padded units, and
+    block-granular (reserved pages, fragmentation included) on paged
+    units, so the mask sees what the device memory actually holds."""
+    kv = [u.kv_occupancy for u in units]
     q1, q3 = percentile(kv, 25), percentile(kv, 75)
     th = q3 + k * (q3 - q1)
-    safe = [u for u in units if u.kv_tokens <= th]
+    safe = [u for u in units if u.kv_occupancy <= th]
     # hard budgets also mask (memory exhaustion risk)
     safe = [u for u in safe
-            if u.batch < u.max_batch and u.kv_tokens < u.kv_budget]
+            if u.batch < u.max_batch and u.kv_occupancy < u.kv_budget]
     if not safe:
         safe = list(units)      # fallback: all saturated
     return safe
@@ -71,8 +74,8 @@ def schedule_decode_batch(
             if best is None or lex_compare(u, best):
                 best = u
         assert best is not None
-        kv_len = req.input_len + req.generated
-        best.admit(kv_len)
+        best.admit(req.input_len + req.generated,
+                   reserve_len=req.input_len + req.output_len)
         req.assigned_dp = best.dp_id
         out.setdefault(best.dp_id, []).append(req)
     return out
@@ -116,13 +119,14 @@ def schedule_decode_global(
             by_inst.setdefault(u.instance_id, []).append(u)
         # level-1 load is the mean over ALL the instance's units — masked
         # (saturated) units still pace its sync barrier, so hiding them
-        # would make a hot instance look cold and attract traffic
+        # would make a hot instance look cold and attract traffic.  Loads
+        # are kv_occupancy so paged fragmentation is balanced, not hidden.
         inst = min(by_inst, key=lambda i: (
-            sum(u.kv_tokens for u in all_of[i]) / len(all_of[i]),
+            sum(u.kv_occupancy for u in all_of[i]) / len(all_of[i]),
             sum(u.batch for u in all_of[i]) / len(all_of[i])))
-        best = min(by_inst[inst], key=lambda u: (u.kv_tokens, u.batch))
-        kv_len = req.input_len + req.generated
-        best.admit(kv_len)
+        best = min(by_inst[inst], key=lambda u: (u.kv_occupancy, u.batch))
+        best.admit(req.input_len + req.generated,
+                   reserve_len=req.input_len + req.output_len)
         req.assigned_dp = best.dp_id
         out.setdefault(best.dp_id, []).append(req)
     return out
@@ -149,11 +153,13 @@ def schedule_decode_immediate(
         elif policy == "least_batch":
             u = min(units, key=lambda x: x.batch)
         elif policy == "least_kv":
-            u = min(units, key=lambda x: x.kv_tokens)
+            # occupancy, like every batched allocator above: the baseline
+            # must not be blind to paged block reservations
+            u = min(units, key=lambda x: x.kv_occupancy)
         else:
             raise ValueError(policy)
-        kv_len = req.input_len + req.generated
-        u.admit(kv_len)
+        u.admit(req.input_len + req.generated,
+                reserve_len=req.input_len + req.output_len)
         req.assigned_dp = u.dp_id
         out.setdefault(u.dp_id, []).append(req)
     return out

@@ -23,6 +23,7 @@ class GlobalState:
         interval: Optional[AdaptiveIntervalController] = None,
         max_batch_per_dp: int = 10_000,
         kv_budget_tokens: int = 10 ** 12,
+        block_size: int = 0,
     ):
         self.chunk_size = chunk_size
         self.prefill_dps: List[DPState] = []
@@ -38,7 +39,8 @@ class GlobalState:
                     dp_id=i * decode_dp_per_instance + j,
                     instance_id=i,
                     max_batch=max_batch_per_dp,
-                    kv_budget=kv_budget_tokens))
+                    kv_budget=kv_budget_tokens,
+                    block_size=block_size))
         self.interval = interval or AdaptiveIntervalController(
             n_active=num_prefill_instances)
         self.num_prefill_instances = num_prefill_instances

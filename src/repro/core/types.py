@@ -11,6 +11,16 @@ import enum
 from typing import Dict, List, Optional, Tuple
 
 
+def blocks_for_tokens(tokens: int, block_size: int) -> int:
+    """Physical KV blocks needed to hold `tokens` entries — THE ceiling
+    rule shared by scheduler-side reservation (`DecodeDPState`), the
+    engine-side allocator (`serving.kv_pool.BlockPool`) and benchmarks,
+    so the two admission layers can never drift apart."""
+    if tokens <= 0:
+        return 0
+    return -(-tokens // block_size)
+
+
 class RequestPhase(str, enum.Enum):
     QUEUED = "queued"            # scheduler-side queue (SBS buffer)
     DISPATCHED = "dispatched"    # in flight to / inside an engine
@@ -91,28 +101,64 @@ class DPState:
 
 @dataclasses.dataclass
 class DecodeDPState:
-    """Decode DP unit state vector V_i = ⟨B_i, K_i⟩ (paper §4.3.3)."""
+    """Decode DP unit state vector V_i = ⟨B_i, K_i⟩ (paper §4.3.3).
+
+    With `block_size` > 0 the unit additionally tracks PAGED occupancy:
+    each admitted request reserves ceil(total_len / block_size) physical
+    KV blocks for its lifetime, where total_len = input + output.  This
+    is a CONSERVATIVE UPPER BOUND on the device-side allocation: the sim
+    plane really holds input+output resident tokens at finish, while the
+    real engine's `BlockPool` reserves for input + min(output, max_new)
+    − 1 (the final sampled token never enters the cache, and the
+    scheduler cannot see the engine's max_new cap).  Over-reservation
+    only delays admission — the engine's pending-retry path absorbs the
+    slack — and admit/release are symmetric, so nothing leaks.  Budget
+    masking and the cost model then see `kv_occupancy` — block-granular,
+    fragmentation included — while `kv_tokens` stays the exact
+    resident-token load."""
     dp_id: int
     instance_id: int
     batch: int = 0          # B_i — number of running decode requests
     kv_tokens: int = 0      # K_i — total KV-cache tokens resident
     max_batch: int = 10_000
     kv_budget: int = 10 ** 12
+    block_size: int = 0     # 0 = token-granular (padded-slot) accounting
+    kv_blocks: int = 0      # physical blocks reserved (block_size > 0)
 
-    def admit(self, kv_len: int) -> None:
+    def _blocks_for(self, tokens: int) -> int:
+        return blocks_for_tokens(tokens, self.block_size)
+
+    @property
+    def kv_occupancy(self) -> int:
+        """KV footprint for budgets/cost: reserved-block tokens when
+        paged (internal fragmentation included), raw tokens otherwise."""
+        if self.block_size:
+            return self.kv_blocks * self.block_size
+        return self.kv_tokens
+
+    def admit(self, kv_len: int, reserve_len: Optional[int] = None) -> None:
+        """`reserve_len` is the request's lifetime KV length (input +
+        output) — what the paged plane reserves blocks for up front."""
         self.batch += 1
         self.kv_tokens += kv_len
+        if self.block_size:
+            self.kv_blocks += self._blocks_for(
+                kv_len if reserve_len is None else reserve_len)
 
     def step(self, n: Optional[int] = None) -> None:
         """Each stepped request grows by 1 KV token.  `n` is the number of
         requests that actually participated in the step — on the real
         plane this can lag `batch` (admitted requests join the padded
-        batch only between steps), so engines pass it explicitly."""
+        batch only between steps), so engines pass it explicitly.  Paged
+        block reservations do not move here: they were taken at admit."""
         self.kv_tokens += self.batch if n is None else n
 
-    def release(self, kv_len: int) -> None:
+    def release(self, kv_len: int, reserve_len: Optional[int] = None) -> None:
         self.batch = max(0, self.batch - 1)
         self.kv_tokens = max(0, self.kv_tokens - kv_len)
+        if self.block_size:
+            self.kv_blocks = max(0, self.kv_blocks - self._blocks_for(
+                kv_len if reserve_len is None else reserve_len))
 
 
 @dataclasses.dataclass

@@ -60,6 +60,109 @@ def _decode_kernel(q_ref, k_ref, v_ref, kvpos_ref, pos_ref,
         o_ref[0] = out.astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tab_ref, pos_ref, q_ref, k_ref, v_ref, kvpos_ref,
+                         o_ref, m_scr, l_scr, acc_scr,
+                         *, scale: float, window: int, nbt: int, K: int):
+    """Block-table-aware decode attention.
+
+    Grid (B·K, nbt): program (r, j) visits logical block j of row r//K.
+    The physical block id comes from the scalar-prefetched block table —
+    the BlockSpec index maps resolve `tab[b, j]` BEFORE the body runs, so
+    the DMA streams exactly the row's own pages through VMEM (unset
+    entries clamp to physical block 0, the null block, and are masked
+    out via the prefetched table value)."""
+    r = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                  # (G, hd)
+    k = k_ref[0, :, 0]            # (bs, hd)
+    v = v_ref[0, :, 0]
+    kvpos = kvpos_ref[0]          # (bs,)
+    pos = pos_ref[r // K]         # scalar
+    live = tab_ref[r // K, j] >= 0
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kvpos >= 0) & (kvpos <= pos) & live
+    if window > 0:
+        valid &= (pos - kvpos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[:, 0] = m_new
+
+    @pl.when(j == nbt - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        out = jnp.where(l[:, None] > 0,
+                        acc_scr[...] / jnp.maximum(l, 1e-30)[:, None], 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,           # (B, H, hd) — one token per row
+    k_pool: jnp.ndarray,      # (N, bs, K, hd) — physical block pool
+    v_pool: jnp.ndarray,
+    kv_pos_pool: jnp.ndarray,  # (N, bs) int32, -1 = empty
+    block_tab: jnp.ndarray,   # (B, nbt) int32, -1 = unset (null block)
+    pos: jnp.ndarray,         # (B,) int32 current positions
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    N, bs, K, _ = k_pool.shape
+    G = H // K
+    nbt = block_tab.shape[1]
+    scale = hd ** -0.5
+
+    qr = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               window=window, nbt=nbt, K=K)
+
+    def blk(r, j, tab, _pos):
+        return (jnp.maximum(tab[r // K, j], 0), 0, r % K, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block table + positions
+        grid=(B * K, nbt),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda r, j, tab, _pos: (r, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), blk),
+            pl.BlockSpec((1, bs, 1, hd), blk),
+            pl.BlockSpec((1, bs),
+                         lambda r, j, tab, _pos:
+                         (jnp.maximum(tab[r // K, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda r, j, tab, _pos: (r, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tab, pos, qr, k_pool, v_pool, kv_pos_pool)
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)
+
+
 def decode_attention_pallas(
     q: jnp.ndarray,           # (B, H, hd) — one token per row
     k_cache: jnp.ndarray,     # (B, S, K, hd)

@@ -5,7 +5,9 @@ import functools
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_kv",
@@ -18,3 +20,16 @@ def decode_attention(q, k_cache, v_cache, kv_pos, pos, *,
     return decode_attention_pallas(
         q, k_cache, v_cache, kv_pos, pos,
         window=window, block_kv=block_kv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, kv_pos_pool, block_tab, pos, *,
+                           window: int = 0, interpret: bool | None = None):
+    """Block-table-aware decode attention: the kv blocks are streamed by
+    physical id resolved from the scalar-prefetched table (no dense
+    gather materialisation)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, kv_pos_pool, block_tab, pos,
+        window=window, interpret=interpret)

@@ -7,6 +7,21 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, kv_pos_pool, block_tab,
+                               pos, window: int = 0):
+    """Dense block-gather oracle for the paged kernel: materialise each
+    row's blocks contiguously, then run the flat reference.  q (B,H,hd);
+    pools (N,bs,K,hd); kv_pos_pool (N,bs); block_tab (B,nbt); pos (B,)."""
+    B, nbt = block_tab.shape
+    bs = k_pool.shape[1]
+    safe = jnp.maximum(block_tab, 0)
+    k = k_pool[safe].reshape((B, nbt * bs) + k_pool.shape[2:])
+    v = v_pool[safe].reshape((B, nbt * bs) + v_pool.shape[2:])
+    kv_pos = jnp.where(block_tab[..., None] < 0, -1,
+                       kv_pos_pool[safe]).reshape(B, nbt * bs)
+    return decode_attention_ref(q, k, v, kv_pos, pos, window)
+
+
 def decode_attention_ref(q, k_cache, v_cache, kv_pos, pos, window: int = 0):
     """q (B,H,hd); caches (B,S,K,hd); kv_pos (B,S); pos (B,)."""
     B, H, hd = q.shape

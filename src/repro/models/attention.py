@@ -273,6 +273,47 @@ def decode_attention(q, k_cache, v_cache, kv_pos, pos, window: int = 0):
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def gather_paged(pool, block_tab):
+    """Block-gather read: materialise a request-contiguous view of a paged
+    pool.  pool (N, bs, ...); block_tab (B, nbt) int32 with -1 = unset
+    (mapped onto physical block 0, the null block).  Returns
+    (B, nbt*bs, ...) — the dense layout `decode_attention` expects."""
+    B, nbt = block_tab.shape
+    bs = pool.shape[1]
+    g = pool[jnp.maximum(block_tab, 0)]            # (B, nbt, bs, ...)
+    return g.reshape((B, nbt * bs) + pool.shape[2:])
+
+
+def gather_paged_pos(kv_pos_pool, block_tab):
+    """Positions of a block-gathered view.  Unset table entries read as -1
+    (empty) regardless of what inactive rows scribbled into the null
+    block — this is what keeps the null block safe to share."""
+    B, nbt = block_tab.shape
+    g = jnp.where(block_tab[..., None] < 0, -1,
+                  kv_pos_pool[jnp.maximum(block_tab, 0)])
+    return g.reshape(B, nbt * kv_pos_pool.shape[1])
+
+
+def decode_attention_paged(q, k_pool, v_pool, kv_pos_pool, block_tab, pos,
+                           window: int = 0):
+    """Single-token decode attention over a paged (block-table) KV cache.
+
+    q: (B, 1, H, hd); pools: (N, bs, K, hd); kv_pos_pool: (N, bs) int32;
+    block_tab: (B, nbt) int32 (-1 = unset); pos: (B,) int32.
+
+    This is the dense-gather REFERENCE path: it materialises each row's
+    blocks into a contiguous (B, nbt*bs, ...) view and reuses
+    `decode_attention` unchanged.  The Pallas kernel
+    (repro.kernels.decode_attention.paged_decode_attention) streams the
+    same blocks through VMEM via scalar-prefetched table lookups without
+    the materialisation.
+    """
+    k = gather_paged(k_pool, block_tab)
+    v = gather_paged(v_pool, block_tab)
+    kv_pos = gather_paged_pos(kv_pos_pool, block_tab)
+    return decode_attention(q, k, v, kv_pos, pos, window)
+
+
 def mla_scores_decode(q_latent, q_rope, c_cache, kr_cache, kv_pos, pos):
     """Absorbed-form MLA decode: q_latent (B,H,r) scores against the latent
     cache directly (no per-head K materialization).

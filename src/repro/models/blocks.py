@@ -179,6 +179,69 @@ def attn_decode(p, x, cfg: ModelConfig, k_cache, v_cache, kv_pos, pos):
     return out, (k_cache, v_cache, kv_pos)
 
 
+def _paged_write_site(block_tab, pos, block_size):
+    """Physical (block, offset) of each row's current token.  Rows whose
+    logical block is unset (inactive slots, or cur past the table) write
+    into physical block 0 — the reserved null block — so they can keep
+    stepping on garbage without touching live pages."""
+    nbt = block_tab.shape[1]
+    lb = jnp.clip(pos // block_size, 0, nbt - 1)
+    phys = jnp.take_along_axis(block_tab, lb[:, None], axis=1)[:, 0]
+    return jnp.maximum(phys, 0), pos % block_size
+
+
+def attn_decode_paged(p, x, cfg: ModelConfig, k_pool, v_pool, kv_pos_pool,
+                      block_tab, pos):
+    """Single-token decode against a paged pool: scatter the new K/V into
+    the row's current physical block, then block-gather attend.  Pools
+    (N, bs, K, hd); kv_pos_pool (N, bs); block_tab (B, nbt); pos (B,)."""
+    window = cfg.sliding_window if cfg.attention == AttentionKind.SWA else 0
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["w_v"])
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    phys, off = _paged_write_site(block_tab, pos, k_pool.shape[1])
+    k_pool = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
+    kv_pos_pool = kv_pos_pool.at[phys, off].set(pos)
+    o = A.decode_attention_paged(q, k_pool, v_pool, kv_pos_pool, block_tab,
+                                 pos, window)
+    out = jnp.einsum("bshe,hed->bsd", o, p["w_o"])
+    return out, (k_pool, v_pool, kv_pos_pool)
+
+
+def mla_decode_paged(p, x, cfg: ModelConfig, ckv_pool, kr_pool, kv_pos_pool,
+                     block_tab, pos):
+    """Absorbed-form MLA decode over a paged latent pool (ckv_pool
+    (N, bs, r); kr_pool (N, bs, dr))."""
+    m = cfg.mla
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _mla_q(p, x, cfg, pos[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
+                   cfg.norm_eps)[:, 0]
+    kr = apply_rope(
+        jnp.einsum("bsd,de->bse", x, p["w_kr"])[:, :, None, :],
+        pos[:, None], cfg.rope_theta)[:, 0, 0]
+    phys, off = _paged_write_site(block_tab, pos, ckv_pool.shape[1])
+    ckv_pool = ckv_pool.at[phys, off].set(ckv.astype(ckv_pool.dtype))
+    kr_pool = kr_pool.at[phys, off].set(kr.astype(kr_pool.dtype))
+    kv_pos_pool = kv_pos_pool.at[phys, off].set(pos)
+    ckv_g = A.gather_paged(ckv_pool, block_tab)
+    kr_g = A.gather_paged(kr_pool, block_tab)
+    kv_pos_g = A.gather_paged_pos(kv_pos_pool, block_tab)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope, p["w_uk"])
+    pattn, _ = A.mla_scores_decode(
+        (q_lat * scale).astype(ckv_g.dtype),
+        (q_rope * scale).astype(kr_g.dtype),
+        ckv_g, kr_g, kv_pos_g, pos)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn.astype(ckv_g.dtype), ckv_g)
+    o = jnp.einsum("bhr,rhe->bhe", ctx, p["w_uv"])
+    out = jnp.einsum("bhe,hed->bd", o, p["w_o"])[:, None]
+    return out, (ckv_pool, kr_pool, kv_pos_pool)
+
+
 # ---------------------------------------------------------------------------
 # MLA sub-layer
 # ---------------------------------------------------------------------------
@@ -444,3 +507,47 @@ def block_decode(p, x, kind: LayerKind, cfg: ModelConfig, cache_entry,
         x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                        p["mlp"]["w_down"])
     return x, new_entry, kv_pos
+
+
+def block_decode_paged(p, x, kind: LayerKind, cfg: ModelConfig, cache_entry,
+                       kv_pos_pool, block_tab, pos):
+    """Single-token decode block over a paged cache.  Attention entries
+    are physical block pools (no batch axis — the batch lives in
+    `block_tab`); SSM states and encoder K/V stay per-slot exactly as in
+    `block_decode` (their footprint is O(1) per request, paging them
+    would buy nothing).  Returns (x, new_cache_entry, new_kv_pos_pool)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (LayerKind.DENSE, LayerKind.MOE):
+        if "xattn" in p:
+            kv, enc_kv = cache_entry
+        else:
+            kv, enc_kv = cache_entry, None
+        if cfg.attention == AttentionKind.MLA:
+            y, new3 = mla_decode_paged(p["attn"], h, cfg, kv[0], kv[1],
+                                       kv_pos_pool, block_tab, pos)
+        else:
+            y, new3 = attn_decode_paged(p["attn"], h, cfg, kv[0], kv[1],
+                                        kv_pos_pool, block_tab, pos)
+        new_entry, kv_pos_pool = (new3[0], new3[1]), new3[2]
+        if enc_kv is not None:
+            new_entry = (new_entry, enc_kv)
+    else:
+        ssm_state, conv_state = cache_entry
+        y, (ssm_state, conv_state) = mamba_decode_step(
+            h, p["mamba"], cfg.ssm, ssm_state, conv_state)
+        new_entry = (ssm_state, conv_state)
+    x = x + y
+    if "xattn" in p:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        _, enc_kv = cache_entry
+        y, _ = cross_attn_full(p["xattn"], h, None, cfg, enc_kv=enc_kv)
+        x = x + y
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = moe_block(h, p["moe"], cfg.moe)
+        x = x + y
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    return x, new_entry, kv_pos_pool

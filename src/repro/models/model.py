@@ -247,6 +247,269 @@ def cache_take(src: Dict, slot: int) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# Paged (block-table) decode cache
+# ---------------------------------------------------------------------------
+#
+# The padded batch cache above reserves max_len tokens per slot whether or
+# not the request ever grows that long.  The paged layout breaks every
+# attention cache into physical blocks of `block_size` tokens shared by
+# the whole DP unit:
+#
+#   per attn layer   (stack, num_blocks, block_size, heads...) pools
+#   kv_pos           (num_blocks, block_size)   per-token positions
+#   block_tab        (slots, nbt) int32         logical -> physical block
+#   cur              (slots,) int32             per-slot token counts
+#
+# A request occupies only ceil(len/block_size) blocks, so a DP's admission
+# limit becomes its FREE-BLOCK count (`serving.kv_pool.BlockPool` is the
+# host-side allocator) instead of its slot count.  Physical block 0 is the
+# reserved null block: -1 table entries map onto it, so inactive slots and
+# table padding scatter garbage there without touching live pages, and
+# gather-side masking (`attention.gather_paged_pos`) makes its contents
+# unobservable.  SSM states, encoder K/V and MoE capacity behave exactly
+# as in the padded cache (per-slot; see the continuous-batching note).
+# SWA ring caches are not paged (the ring already bounds memory).
+
+
+def paged_layout(cfg: ModelConfig, max_len: int, block_size: int
+                 ) -> Tuple[int, int]:
+    """(nbt, block_size) table geometry for a paged cache equivalent to a
+    dense max_len cache.  Validates the config supports paging."""
+    if not _has_attn_cache(cfg):
+        raise ValueError(f"{cfg.name}: no attention cache to page")
+    if cfg.attention == AttentionKind.SWA and cfg.sliding_window:
+        raise ValueError(
+            f"{cfg.name}: SWA ring caches are already bounded — use the "
+            f"padded cache")
+    if block_size < 1 or max_len % block_size != 0:
+        raise ValueError(
+            f"max_len={max_len} must be a positive multiple of "
+            f"block_size={block_size}")
+    return max_len // block_size, block_size
+
+
+def _paged_entry_struct(cfg: ModelConfig, kind: LayerKind, num_blocks: int,
+                        block_size: int, slots: int, dtype, enc_len: int = 0):
+    """Like _entry_struct but attention K/V live in block pools; SSM and
+    encoder entries keep their per-slot batch layout."""
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    if kind in (LayerKind.DENSE, LayerKind.MOE):
+        if cfg.attention == AttentionKind.MLA:
+            m = cfg.mla
+            kv = (jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+                  jnp.zeros((num_blocks, block_size, m.qk_rope_head_dim),
+                            dtype))
+        else:
+            kv = (jnp.zeros((num_blocks, block_size, K, hd), dtype),
+                  jnp.zeros((num_blocks, block_size, K, hd), dtype))
+        if cfg.is_encoder_decoder:
+            enc_kv = (jnp.zeros((slots, enc_len, K, hd), dtype),
+                      jnp.zeros((slots, enc_len, K, hd), dtype))
+            return (kv, enc_kv)
+        return kv
+    # SSM (and its enc-dec variant): identical to the padded layout
+    return _entry_struct(cfg, kind, slots, 1, dtype, enc_len)
+
+
+def _cache_groups(cfg: ModelConfig):
+    """[(cache key path, LayerKind, stack size)] in layout order."""
+    P, pattern, reps = layer_layout(cfg)
+    groups = []
+    if P:
+        groups.append(("prefix", LayerKind.DENSE, P))
+    for j, kind in enumerate(pattern):
+        groups.append((f"p{j}", kind, reps))
+    return groups
+
+
+def _group_entry(cache: Dict, key: str):
+    return cache[key] if key == "prefix" else cache["blocks"][key]
+
+
+def _set_group_entry(cache: Dict, key: str, val) -> None:
+    if key == "prefix":
+        cache[key] = val
+    else:
+        cache["blocks"][key] = val
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, num_blocks: int,
+                     max_len: int, block_size: int,
+                     dtype=jnp.float32) -> Dict:
+    """Paged decode cache for one DP unit: `slots` batch rows sharing
+    `num_blocks` physical blocks (block 0 reserved as the null block)."""
+    nbt, _ = paged_layout(cfg, max_len, block_size)
+    enc_len = cfg.encoder_seq_len if cfg.is_encoder_decoder else 0
+
+    def stack(n, kind):
+        e = _paged_entry_struct(cfg, kind, num_blocks, block_size, slots,
+                                dtype, enc_len)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), e)
+
+    cache: Dict = {
+        "cur": jnp.zeros((slots,), jnp.int32),
+        "kv_pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+        "block_tab": jnp.full((slots, nbt), -1, jnp.int32),
+        "blocks": {},
+    }
+    for key, kind, n in _cache_groups(cfg):
+        _set_group_entry(cache, key, stack(n, kind))
+    return cache
+
+
+def _is_attn_kind(kind: LayerKind) -> bool:
+    return kind in (LayerKind.DENSE, LayerKind.MOE)
+
+
+def _split_entry(cfg: ModelConfig, entry):
+    """(core, enc_kv-or-None) for one group entry."""
+    if cfg.is_encoder_decoder:
+        return entry[0], entry[1]
+    return entry, None
+
+
+def _joined_entry(cfg: ModelConfig, core, enc):
+    return (core, enc) if cfg.is_encoder_decoder else core
+
+
+def paged_cache_join(cfg: ModelConfig, dst: Dict, src: Dict, slot,
+                     tab_row) -> Dict:
+    """Install the batch-1 dense cache `src` (a finished prefill) into the
+    paged cache `dst`: its KV tokens are scattered into the physical
+    blocks named by `tab_row` ((nbt,) int32, -1 padding) and slot `slot`'s
+    table row / token count are set.  `slot` and `tab_row` may be traced
+    (one jitted shape regardless of how many blocks are real: padding
+    entries scatter into the null block)."""
+    nbt = dst["block_tab"].shape[1]
+    bs = dst["kv_pos"].shape[1]
+    if src["kv_pos"].shape[1] != nbt * bs:
+        raise ValueError(
+            f"paged_cache_join: src max_len {src['kv_pos'].shape[1]} != "
+            f"table capacity {nbt * bs}")
+    ids = jnp.maximum(tab_row, 0)
+
+    def scatter_pool(pool, dense):
+        # pool (n, N, bs, ...); dense (n, 1, nbt*bs, ...)
+        n = pool.shape[0]
+        new = dense[:, 0].reshape((n, nbt, bs) + pool.shape[3:])
+        return pool.at[:, ids].set(new.astype(pool.dtype))
+
+    def set_slot(arr, dense):
+        # per-slot entries: arr (n, slots, ...); dense (n, 1, ...)
+        return arr.at[:, slot].set(dense[:, 0].astype(arr.dtype))
+
+    out: Dict = {
+        "cur": dst["cur"].at[slot].set(src["cur"][0]),
+        "kv_pos": dst["kv_pos"].at[ids].set(
+            src["kv_pos"][0].reshape(nbt, bs)),
+        "block_tab": dst["block_tab"].at[slot].set(tab_row),
+        "blocks": {},
+    }
+    for key, kind, _ in _cache_groups(cfg):
+        d_core, d_enc = _split_entry(cfg, _group_entry(dst, key))
+        s_core, s_enc = _split_entry(cfg, _group_entry(src, key))
+        if _is_attn_kind(kind):
+            core = jax.tree.map(scatter_pool, d_core, s_core)
+        else:
+            core = jax.tree.map(set_slot, d_core, s_core)
+        enc = (jax.tree.map(set_slot, d_enc, s_enc)
+               if d_enc is not None else None)
+        _set_group_entry(out, key, _joined_entry(cfg, core, enc))
+    return out
+
+
+def paged_cache_take(cfg: ModelConfig, src: Dict, slot: int) -> Dict:
+    """Extract slot `slot` of a paged cache as a dense batch-1 cache (the
+    inverse of paged_cache_join — watchdog migration and cross-plane
+    handoff speak the dense format).  `slot` must be a concrete int."""
+    tab_row = src["block_tab"][slot]                       # (nbt,)
+    nbt = tab_row.shape[0]
+    bs = src["kv_pos"].shape[1]
+    ids = jnp.maximum(tab_row, 0)
+
+    def gather_pool(pool):
+        # (n, N, bs, ...) -> (n, 1, nbt*bs, ...)
+        n = pool.shape[0]
+        g = pool[:, ids]                                   # (n, nbt, bs, ...)
+        return g.reshape((n, 1, nbt * bs) + pool.shape[3:])
+
+    def take_slot(arr):
+        return jax.lax.slice_in_dim(arr, slot, slot + 1, axis=1)
+
+    kv_pos = jnp.where(tab_row[:, None] < 0, -1, src["kv_pos"][ids])
+    out: Dict = {
+        "cur": jax.lax.slice_in_dim(src["cur"], slot, slot + 1, axis=0),
+        "kv_pos": kv_pos.reshape(1, nbt * bs),
+        "blocks": {},
+    }
+    for key, kind, _ in _cache_groups(cfg):
+        core, enc = _split_entry(cfg, _group_entry(src, key))
+        if _is_attn_kind(kind):
+            core = jax.tree.map(gather_pool, core)
+        else:
+            core = jax.tree.map(take_slot, core)
+        enc = jax.tree.map(take_slot, enc) if enc is not None else None
+        _set_group_entry(out, key, _joined_entry(cfg, core, enc))
+    return out
+
+
+def paged_cache_clear_slot(cache: Dict, slot) -> Dict:
+    """Leave-on-finish for the paged cache: drop slot `slot`'s block-table
+    row so its future (garbage) writes route to the null block instead of
+    pages the pool may hand to another request."""
+    out = dict(cache)
+    out["block_tab"] = cache["block_tab"].at[slot].set(-1)
+    return out
+
+
+def paged_decode_step(cfg: ModelConfig, params, token, cache):
+    """One decode step over a paged cache.  token (slots, 1) int32;
+    returns (logits (slots, V), cache).  Mirrors `decode_step`; only the
+    attention cache access is block-table-indirect."""
+    from repro.models.blocks import block_decode_paged
+    pos = cache["cur"]                                  # (slots,)
+    x = jnp.take(params["embed"], token, axis=0)        # (slots,1,D)
+    kv_pos = cache["kv_pos"]
+    block_tab = cache["block_tab"]
+    P, pattern, reps = layer_layout(cfg)
+    new_cache: Dict = dict(cache)
+
+    def make_body(kinds, keys):
+        def body(carry, xs):
+            x, kv_pos = carry
+            p_slice, c_slice = xs
+            new_entries = {}
+            for j, kind in enumerate(kinds):
+                x, entry, kv_pos = block_decode_paged(
+                    p_slice[keys[j]], x, kind, cfg, c_slice[keys[j]],
+                    kv_pos, block_tab, pos)
+                new_entries[keys[j]] = entry
+            return (x, kv_pos), new_entries
+        return body
+
+    if P:
+        body = make_body([LayerKind.DENSE], ["s0"])
+        (x, kv_pos), ys = jax.lax.scan(
+            body, (x, kv_pos),
+            ({"s0": params["prefix"]}, {"s0": cache["prefix"]}))
+        new_cache["prefix"] = ys["s0"]
+    keys = [f"s{j}" for j in range(len(pattern))]
+    body = make_body(list(pattern), keys)
+    p_stack = {f"s{j}": params["blocks"][f"p{j}"] for j in range(len(pattern))}
+    c_stack = {f"s{j}": cache["blocks"][f"p{j}"] for j in range(len(pattern))}
+    (x, kv_pos), ys = jax.lax.scan(body, (x, kv_pos), (p_stack, c_stack))
+    new_cache["blocks"] = {f"p{j}": ys[f"s{j}"] for j in range(len(pattern))}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, 0])
+    new_cache["kv_pos"] = kv_pos
+    new_cache["cur"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Encoder (whisper)
 # ---------------------------------------------------------------------------
 

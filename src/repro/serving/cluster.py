@@ -46,8 +46,9 @@ def build_state(cfg_s: ServingConfig) -> GlobalState:
             window_size=cfg_s.window_size, l_net=cfg_s.l_net,
             t_default=cfg_s.t_default,
             n_active=cfg_s.num_prefill_instances),
-        max_batch_per_dp=cfg_s.max_batch_per_dp,
+        max_batch_per_dp=cfg_s.resolved_decode_slots,
         kv_budget_tokens=cfg_s.kv_budget_tokens,
+        block_size=cfg_s.block_size,
     )
 
 

@@ -113,7 +113,13 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def decode_dp_time(self, batch: int, kv_tokens: int) -> float:
-        """One decode iteration on one DP unit (memory-bound)."""
+        """One decode iteration on one DP unit (memory-bound).
+
+        `kv_tokens` is the KV footprint actually swept from HBM each
+        step.  Callers pass `DecodeDPState.kv_occupancy`: exact resident
+        tokens on a padded deployment, reserved-block tokens (internal
+        fragmentation included) on a paged one — so the sim plane prices
+        the same block-granular reads the real paged engine performs."""
         if batch <= 0:
             return 0.0
         chips = self.chips_per_decode_dp

@@ -179,7 +179,10 @@ class SimDecodeInstance(DecodeEngine):
         self.busy = True
         by_id = {s.dp_id: s for s in dp_states}
         batches = [len(self.running[d]) for d in self.dp_ids]
-        kvs = [by_id[d].kv_tokens for d in self.dp_ids]
+        # kv_occupancy: paged units are priced at block granularity
+        # (reserved pages are resident and swept every step), so the sim
+        # plane models the same fragmentation the real paged engine pays
+        kvs = [by_id[d].kv_occupancy for d in self.dp_ids]
         self.steps += 1
         return self.cost.decode_step_time(batches, kvs)
 
@@ -202,7 +205,8 @@ class SimDecodeInstance(DecodeEngine):
                     req.first_token_time = now
                 if req.generated >= self._target_len(req):
                     req.finish_time = now
-                    st.release(req.input_len + req.generated)
+                    st.release(req.input_len + req.generated,
+                               reserve_len=req.input_len + req.output_len)
                     finished.append(req)
                 else:
                     alive.append(req)

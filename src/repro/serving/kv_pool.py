@@ -1,0 +1,120 @@
+"""Paged KV block allocator — the host-side control plane of the paged
+decode cache (the device-side pool layout lives in `models.model`'s
+`init_paged_cache` family).
+
+A `BlockPool` owns a fixed set of physical KV blocks of `block_size`
+tokens each.  Requests hold *block tables* (lists of physical block ids)
+instead of a padded `max_len` slot, so a DP unit's admission limit is its
+free-block count, not its slot count — the same mechanism vLLM-style
+PagedAttention and Sarathi-Serve use to keep decode concurrency high at a
+fixed KV memory budget.
+
+Physical block 0 is RESERVED as the null block: inactive batch rows and
+padding entries of a block table scatter their garbage writes there, so
+the pool never hands it out.  The allocator is deliberately strict —
+double-free and foreign-id frees raise instead of corrupting the free
+list — because the property suite (tests/test_kv_pool.py) drives it with
+random join/take/free sequences and any silent self-healing would mask a
+real leak in the engine.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence
+
+from repro.core.types import blocks_for_tokens
+
+NULL_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """Allocation request exceeds the pool's free-block count."""
+
+
+class BlockPool:
+    """Fixed-capacity physical KV block allocator (one per decode DP).
+
+    ids run 1..num_blocks-1 (0 is the reserved null block); `alloc`
+    returns the lowest free ids first so reuse is deterministic and the
+    property tests can assert freed pages come back.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is reserved)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # sorted free list => deterministic lowest-id-first reuse
+        self._free: List[int] = list(range(1, num_blocks))
+        self._used: set = set()
+
+    # -- capacity probes -------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._used)
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Usable KV tokens (the null block is dead memory)."""
+        return (self.num_blocks - 1) * self.block_size
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold `tokens` KV entries (the shared ceiling
+        rule — scheduler reservations use the same function)."""
+        return blocks_for_tokens(tokens, self.block_size)
+
+    def can_alloc(self, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= self.free_count
+
+    # -- alloc / free ----------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Take `n` blocks off the free list (lowest ids first)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise OutOfBlocks(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool of {self.num_blocks})")
+        taken, self._free = self._free[:n], self._free[n:]
+        self._used.update(taken)
+        return taken
+
+    def alloc_for(self, tokens: int) -> List[int]:
+        return self.alloc(self.blocks_for(tokens))
+
+    def free(self, ids: Iterable[int]) -> None:
+        """Return blocks to the pool.  Raises on double-free, the null
+        block, or ids the pool never issued."""
+        for b in ids:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the reserved null block")
+            if b not in self._used:
+                raise ValueError(f"free of unallocated block {b}")
+            self._used.discard(b)
+            self._free.append(b)
+        self._free.sort()
+
+    # -- invariants (asserted by the property suite) ---------------------
+    def check(self) -> None:
+        """Conservation: every non-null block is free XOR used, once."""
+        free = self._free
+        assert len(set(free)) == len(free), "duplicate ids on the free list"
+        assert not (set(free) & self._used), "block both free and used"
+        assert NULL_BLOCK not in set(free) | self._used, "null block leaked"
+        assert len(free) + len(self._used) == self.num_blocks - 1, (
+            f"leak: {len(free)} free + {len(self._used)} used != "
+            f"{self.num_blocks - 1}")
+
+
+def pad_block_table(ids: Sequence[int], width: int) -> List[int]:
+    """Fixed-width block-table row: real ids then -1 padding (the jit'd
+    cache surgery takes a constant-shape row; -1 marks unset slots and
+    routes scatter traffic to the null block)."""
+    if len(ids) > width:
+        raise ValueError(f"{len(ids)} blocks exceed table width {width}")
+    return list(ids) + [-1] * (width - len(ids))

@@ -92,11 +92,27 @@ class PrefillEngine(abc.ABC):
 
 class DecodeEngine(abc.ABC):
     """One decode instance: DP units step together behind the sync
-    barrier; requests join on KV handoff and leave on completion."""
+    barrier; requests join on KV handoff and leave on completion.
+
+    KV ACCOUNTING IS BLOCK-GRANULAR when the deployment pages its caches
+    (ServingConfig.block_size > 0): the scheduler-side `DecodeDPState`
+    tracks reserved blocks (`kv_blocks` / `kv_occupancy`) next to the
+    exact token load, budgets and the `sbs-la` load balancer read
+    `kv_occupancy`, and an engine admits a handed-off request only while
+    its DP's free-BLOCK count covers the request's lifetime pages — not
+    merely while a batch slot is free.  `free_kv_tokens` exposes that
+    device-side headroom to drivers/diagnostics; padded engines report
+    free slots × max_len."""
 
     instance_id: int
     dp_ids: List[int]
     epoch: int          # bumped by drain(); invalidates in-flight steps
+
+    def free_kv_tokens(self, dp_id: int) -> Optional[int]:
+        """Admission headroom of one DP in KV tokens (block-granular on
+        paged engines); None when the backend has no physical cache (the
+        cost-model sims — their capacity lives in DecodeDPState)."""
+        return None
 
     @abc.abstractmethod
     def admit(self, dp_id: int, req: Request) -> None:

@@ -15,13 +15,24 @@ logits) plus the finished cache are published on the `KVHandoffBus` —
 the paper's P/D KV-cache transfer, priced by `transfer_time` on the
 runtime heap and physically realised at join time.
 
-Decode is CONTINUOUS BATCHED decode: each DP unit owns a padded
-`max_batch`-slot cache (`models.model.init_cache`); handed-off requests
-JOIN by `cache_join` into a free slot, every step runs one batched
-`decode_step` per occupied DP behind the instance sync barrier, and
-finished requests LEAVE by simply freeing their slot.  All scheduler
-state mutation happens on the runtime thread (finish_pass/finish_step);
-worker threads only execute JAX computations on snapshots.
+Decode is CONTINUOUS BATCHED decode with two cache backends behind one
+engine:
+
+  padded (block_size=0)  each DP owns a `max_batch`-slot dense cache
+      (`init_cache`); a free SLOT is the admission token.
+  paged  (block_size>0)  each DP owns a shared `BlockPool` + block-table
+      cache (`init_paged_cache`); admission is by free-BLOCK count — a
+      request's lifetime pages are reserved at join and returned at
+      leave/drain, so the same KV memory budget sustains far more
+      concurrent short requests than max_len-padded slots would.
+
+Handed-off requests JOIN by `cache_join`/`paged_cache_join` into a free
+slot, every step runs one batched `decode_step`/`paged_decode_step` per
+occupied DP behind the instance sync barrier, and finished requests
+LEAVE by freeing their slot (paged: also dropping their table row and
+returning their blocks).  All scheduler state mutation happens on the
+runtime thread (finish_pass/finish_step); worker threads only execute
+JAX computations on snapshots.
 """
 from __future__ import annotations
 
@@ -37,9 +48,12 @@ import jax.numpy as jnp
 from repro.config.base import ModelConfig
 from repro.core.types import Request, RequestPhase
 from repro.models.model import (
-    cache_join, cache_take, decode_step, init_cache, prefill_chunk,
+    cache_join, cache_take, decode_step, init_cache, init_paged_cache,
+    paged_cache_clear_slot, paged_cache_join, paged_cache_take, paged_layout,
+    prefill_chunk, paged_decode_step,
 )
 from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+from repro.serving.kv_pool import BlockPool, pad_block_table
 from repro.serving.plane import ASYNC, PassResult, StartResult
 
 
@@ -52,12 +66,23 @@ from repro.serving.plane import ASYNC, PassResult, StartResult
 class EngineSpec:
     """Model + jit context shared by every engine of one deployment, so
     each (chunk-shape, batch-shape) compiles exactly once per process
-    instead of once per engine instance."""
+    instead of once per engine instance.
+
+    `max_batch` doubles as the decode-plane MEMORY budget: the padded
+    plane allocates max_batch slots of max_len tokens per DP; the paged
+    plane (block_size > 0) spends the SAME token budget on a shared
+    `BlockPool` of max_batch·max_len/block_size blocks, with
+    `decode_slots` (default 2×max_batch) cheap batch rows on top — so a
+    paged DP admits by free-block count and sustains more concurrent
+    requests than the padded DP at equal memory."""
     cfg: ModelConfig
     params: Any
     max_len: int = 256
-    max_batch: int = 8          # decode slots per DP unit
+    max_batch: int = 8          # decode slots per DP unit (= memory budget)
     max_new: int = 0            # 0 = no cap on generated tokens
+    block_size: int = 0         # paged KV block size (0 = padded slots)
+    decode_slots: int = 0       # paged batch rows per DP (0 = 2×max_batch)
+    pool_blocks: int = 0        # physical blocks per DP (0 = equal-memory)
 
     def __post_init__(self):
         cfg = self.cfg
@@ -66,6 +91,30 @@ class EngineSpec:
         self.jit_decode = jax.jit(
             lambda p, t, c: decode_step(cfg, p, t, c))
         self.jit_join = jax.jit(cache_join)
+        if self.block_size:
+            self.nbt, _ = paged_layout(cfg, self.max_len, self.block_size)
+            self.jit_paged_decode = jax.jit(
+                lambda p, t, c: paged_decode_step(cfg, p, t, c))
+            self.jit_paged_join = jax.jit(
+                lambda d, s, slot, tab: paged_cache_join(cfg, d, s, slot,
+                                                         tab))
+
+    @property
+    def paged(self) -> bool:
+        return self.block_size > 0
+
+    @property
+    def paged_slots(self) -> int:
+        from repro.config.base import PAGED_SLOTS_FACTOR
+        return self.decode_slots or self.max_batch * PAGED_SLOTS_FACTOR
+
+    @property
+    def paged_pool_blocks(self) -> int:
+        """Physical blocks per DP; default matches the padded plane's
+        token capacity exactly (+1 for the reserved null block)."""
+        if self.pool_blocks:
+            return self.pool_blocks
+        return self.max_batch * self.max_len // self.block_size + 1
 
     def request_cache(self) -> Dict:
         return init_cache(self.cfg, 1, self.max_len)
@@ -73,10 +122,21 @@ class EngineSpec:
     def batch_cache(self) -> Dict:
         return init_cache(self.cfg, self.max_batch, self.max_len)
 
+    def paged_cache(self) -> Dict:
+        return init_paged_cache(self.cfg, self.paged_slots,
+                                self.paged_pool_blocks, self.max_len,
+                                self.block_size)
+
     def target_len(self, req: Request) -> int:
         if self.max_new:
             return min(req.output_len, self.max_new)
         return req.output_len
+
+    def lifetime_tokens(self, req: Request) -> int:
+        """KV tokens resident when `req` finishes: the prompt plus one
+        written KV entry per decode step (the final sampled token never
+        enters the cache)."""
+        return req.input_len + max(self.target_len(req) - 1, 0)
 
 
 @dataclasses.dataclass
@@ -257,11 +317,12 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
 class _DPDecodeState:
     """One DP unit's padded continuous batch (lazily allocated)."""
 
-    def __init__(self, spec: EngineSpec):
+    def __init__(self, spec: EngineSpec, n_slots: Optional[int] = None):
         self.spec = spec
         self.cache: Optional[Dict] = None
-        self.slots: List[Optional[Request]] = [None] * spec.max_batch
-        self.next_tok: List[int] = [0] * spec.max_batch
+        n = n_slots if n_slots is not None else spec.max_batch
+        self.slots: List[Optional[Request]] = [None] * n
+        self.next_tok: List[int] = [0] * n
 
     def free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
@@ -271,6 +332,31 @@ class _DPDecodeState:
 
     def occupied(self) -> bool:
         return any(r is not None for r in self.slots)
+
+    # padded plane: a free slot IS the admission token
+    def can_admit(self, need_tokens: int) -> bool:
+        return self.free_slot() is not None
+
+
+class _DPPagedState(_DPDecodeState):
+    """One DP unit's paged continuous batch: `paged_slots` cheap batch
+    rows over a shared `BlockPool`.  Admission is by free-BLOCK count —
+    a request's lifetime blocks are reserved at join (so a resident
+    request can never strand mid-generation waiting for a page) and
+    returned at leave/drain."""
+
+    def __init__(self, spec: EngineSpec):
+        super().__init__(spec, n_slots=spec.paged_slots)
+        self.pool = BlockPool(spec.paged_pool_blocks, spec.block_size)
+        self.held: Dict[int, List[int]] = {}       # rid -> block ids
+
+    def can_admit(self, need_tokens: int) -> bool:
+        need = self.pool.blocks_for(need_tokens)
+        if need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request needs {need} blocks, pool holds only "
+                f"{self.pool.num_blocks - 1} — raise max_len/pool_blocks")
+        return self.free_slot() is not None and need <= self.pool.free_count
 
 
 class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
@@ -286,18 +372,28 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         self.spec = spec
         self.bus = bus
         self._post = None
+        state_cls = _DPPagedState if spec.paged else _DPDecodeState
         self._dp: Dict[int, _DPDecodeState] = {
-            d: _DPDecodeState(spec) for d in dp_ids}
+            d: state_cls(spec) for d in dp_ids}
         self._pending: List[Tuple[int, Request]] = []
         self._slot_of: Dict[int, Tuple[int, int]] = {}   # rid -> (dp, slot)
         self._participants: Dict[int, List[Tuple[Request, int]]] = {}
         self._result: Optional[Dict[int, Tuple[Dict, List[int]]]] = None
+        self._join_finished: List[Request] = []
+        self.peak_resident = 0      # max concurrent resident requests
 
     # -- lifecycle -------------------------------------------------------
     def bind_loop(self, loop) -> None:
         self._post = loop.post
 
     # -- EnginePlane -----------------------------------------------------
+    def free_kv_tokens(self, dp_id: int) -> Optional[int]:
+        st = self._dp[dp_id]
+        if self.spec.paged:
+            return st.pool.free_count * self.spec.block_size
+        free_slots = sum(1 for r in st.slots if r is None)
+        return free_slots * self.spec.max_len
+
     def admit(self, dp_id: int, req: Request) -> None:
         # buffered: joins are applied between steps (start_step), never
         # while a worker-thread step is in flight
@@ -317,26 +413,54 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
             gen = self.bus.gen(req.rid)
             if req.generated >= self._target_len(req):
                 # the prefill-emitted token already satisfied the request
-                # (output_len == 1): finish at join, never occupy a slot
+                # (output_len == 1): finish at join, never occupy a slot.
+                # Stash it so the next finish_step reports it to the
+                # runtime (closed-loop refill); when no step ever runs the
+                # request still settles — the realtime loop's
+                # _all_settled early-exit covers the open-loop path.
+                # KNOWN LIMIT: if NO step ever runs on this instance the
+                # stash is never reported — closed_loop refill and the
+                # watchdog's on_step_end ack miss it (an idle instance may
+                # be spuriously drained once, harmlessly, under
+                # watchdog_multiplier > 0).  Fixing this needs a
+                # completion channel besides finish_step on the
+                # EnginePlane contract.
                 if req.first_token_time is None:
                     req.first_token_time = now
                 req.finish_time = now
                 req.phase = RequestPhase.FINISHED
                 gen.cache = None
-                by_id[dp_id].release(req.input_len + req.generated)
+                by_id[dp_id].release(
+                    req.input_len + req.generated,
+                    reserve_len=req.input_len + req.output_len)
+                self._join_finished.append(req)
+                continue
+            # padded: admission token = a free slot; paged: a free slot
+            # AND the request's lifetime blocks (reserved up front so a
+            # resident request never stalls mid-generation on a page)
+            if not st.can_admit(self.spec.lifetime_tokens(req)):
+                still.append((dp_id, req))   # retry after this step
                 continue
             slot = st.free_slot()
-            if slot is None:        # over-packed DP: retry after this step
-                still.append((dp_id, req))
-                continue
             if st.cache is None:
-                st.cache = self.spec.batch_cache()
-            st.cache = self.spec.jit_join(st.cache, gen.cache, slot)
+                st.cache = (self.spec.paged_cache() if self.spec.paged
+                            else self.spec.batch_cache())
+            if self.spec.paged:
+                ids = st.pool.alloc(st.pool.blocks_for(
+                    self.spec.lifetime_tokens(req)))
+                st.held[req.rid] = ids
+                tab = jnp.asarray(pad_block_table(ids, self.spec.nbt),
+                                  jnp.int32)
+                st.cache = self.spec.jit_paged_join(st.cache, gen.cache,
+                                                    slot, tab)
+            else:
+                st.cache = self.spec.jit_join(st.cache, gen.cache, slot)
             gen.cache = None        # resident now; parked copy released
             st.slots[slot] = req
             st.next_tok[slot] = gen.tokens[-1]
             self._slot_of[req.rid] = (dp_id, slot)
             self.running[dp_id].append(req)
+            self.peak_resident = max(self.peak_resident, len(self._slot_of))
         self._pending = still
 
     def start_step(self, dp_states, now: Optional[float] = None
@@ -369,11 +493,12 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         # worker thread: one batched decode_step per occupied DP (the
         # instance-level sync barrier = all DPs in one serial job)
         t0 = time.monotonic()
+        step = (self.spec.jit_paged_decode if self.spec.paged
+                else self.spec.jit_decode)
         try:
             res: Dict[int, Tuple[Dict, List[int]]] = {}
             for dp_id, cache, toks in jobs:
-                logits, new_cache = self.spec.jit_decode(
-                    self.spec.params, toks, cache)
+                logits, new_cache = step(self.spec.params, toks, cache)
                 nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
                 res[dp_id] = (new_cache, nxt)
             self._result = res
@@ -396,7 +521,20 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         finished = super().finish_step(now, dp_states)
         for req in finished:
             dp_id, slot = self._slot_of.pop(req.rid)
-            self._dp[dp_id].slots[slot] = None       # leave-on-finish
+            st = self._dp[dp_id]
+            st.slots[slot] = None                    # leave-on-finish
+            if self.spec.paged:
+                # drop the table row FIRST: the now-inactive slot keeps
+                # stepping on garbage, and its writes must route to the
+                # null block, never to pages the pool re-issues
+                st.cache = paged_cache_clear_slot(st.cache, slot)
+                st.pool.free(st.held.pop(req.rid))
+        if self._join_finished:
+            # requests satisfied at join time (never occupied a slot):
+            # report them with this step's completions so the runtime's
+            # closed-loop refill sees every finish
+            finished = self._join_finished + finished
+            self._join_finished = []
         return finished
 
     def drain(self) -> Dict[int, List[Request]]:
@@ -405,7 +543,16 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         # the requests (with their generation state) on a healthy instance
         for rid, (dp_id, slot) in list(self._slot_of.items()):
             st = self._dp[dp_id]
-            self.bus.gen(rid).cache = cache_take(st.cache, slot)
+            if self.spec.paged:
+                # eager (unjitted), like the padded cache_take branch: the
+                # drain path is rare and per-slot jit specialisation would
+                # compile a fresh gather program mid-recovery
+                self.bus.gen(rid).cache = paged_cache_take(
+                    self.spec.cfg, st.cache, slot)
+                st.cache = paged_cache_clear_slot(st.cache, slot)
+                st.pool.free(st.held.pop(rid))
+            else:
+                self.bus.gen(rid).cache = cache_take(st.cache, slot)
             st.slots[slot] = None
         self._slot_of.clear()
         for dp_id, req in self._pending:

@@ -213,7 +213,8 @@ class ClusterRuntime:
             for dp_id, reqs in drained.items():
                 st = by_id[dp_id]
                 for r in reqs:
-                    st.release(r.input_len + r.generated)
+                    st.release(r.input_len + r.generated,
+                               reserve_len=r.input_len + r.output_len)
                     r.assigned_dp = None
                     r.migrations += 1
                     orphans.append(r)

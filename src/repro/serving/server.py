@@ -13,12 +13,14 @@ times so the Algorithm-1 feedback loop adapts the dispatch interval
 online.  Wall-clock here is CPU time on a tiny model — the control plane
 is identical to the production layout.
 
-The server never mutates caller-owned Request timing fields beyond the
-scheduler-written stamps: `arrival_time` stays relative to serve() start
-(the runtime clock is relative wall time), so a request list can be
-replayed across repeated serve() calls.  Repeated serve() is supported
-after a COMPLETED run: each call spawns fresh worker threads and the
-runtime resets time-gated scheduler stamps to the new clock; the adapted
+The server never rewrites caller-owned `arrival_time` (the runtime
+clock is relative wall time), so the same WORKLOAD can be replayed
+across serve() calls — but build fresh Request objects per call:
+progress fields (remaining_prefill, generated, phase, finish stamps)
+are mutated in place by a run, and re-submitting finished objects would
+re-enter the pipeline mid-state.  Repeated serve() is supported after a
+COMPLETED run: each call spawns fresh worker threads and the runtime
+resets time-gated scheduler stamps to the new clock; the adapted
 T_fwd/interval estimate deliberately persists (warm start).  After a
 timeout the deployment may still hold in-flight passes and should be
 discarded.
@@ -85,10 +87,16 @@ class RealSBSServer:
             watchdog_multiplier=watchdog_multiplier)
         # a spec may be shared across server instances (e.g. one per
         # scheduler variant over the same model) so each jitted shape
-        # compiles once per process instead of once per server
-        self.spec = spec or EngineSpec(cfg, params, max_len=max_len,
-                                       max_batch=scfg.max_batch_per_dp,
-                                       max_new=max_new)
+        # compiles once per process instead of once per server.  With
+        # scfg.block_size > 0 the decode plane is PAGED: same KV memory
+        # budget (max_batch_per_dp × max_len tokens per DP), block-pool
+        # admission, resolved_decode_slots batch rows.
+        self.spec = spec or EngineSpec(
+            cfg, params, max_len=max_len,
+            max_batch=scfg.max_batch_per_dp, max_new=max_new,
+            block_size=scfg.block_size,
+            decode_slots=(scfg.resolved_decode_slots
+                          if scfg.block_size else 0))
         self.bus = KVHandoffBus()
         self.engines = [
             RealPrefillEngine(
@@ -114,6 +122,14 @@ class RealSBSServer:
                 raise ValueError(
                     f"request {r.rid}: the real plane needs `tokens` of "
                     f"length >= input_len")
+            # every KV entry the request will ever write must fit max_len:
+            # beyond it the padded cache would silently drop positions
+            # (jitted scatter clamps) and decode garbage
+            need = self.spec.lifetime_tokens(r)
+            if need > self.spec.max_len:
+                raise ValueError(
+                    f"request {r.rid}: input_len + generated tokens "
+                    f"({need}) exceed max_len={self.spec.max_len}")
         workers = [*self.engines, *self.decode_engines]
         for e in workers:
             e.start()

@@ -15,6 +15,11 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: heavyweight model/jit cases (deselect with "
         "-m 'not slow' for the fast tier-1 loop)")
+    config.addinivalue_line(
+        "markers", "paged: paged (block-table) KV cache suite — the "
+        "allocator/cache-surgery property tests run in the fast tier "
+        "(scripts/ci.sh); the heavyweight cross-plane equivalence sweep "
+        "is additionally @slow and only runs under --full")
 
 
 # ---------------------------------------------------------------------------

@@ -81,6 +81,44 @@ def test_decode_conservation(seed):
     assert live_kv == expected_live
 
 
+@pytest.mark.paged
+@given(seed=st.integers(0, 4),
+       block_size=st.sampled_from([16, 64, 256]),
+       sched=st.sampled_from(["sbs", "sbs-la"]))
+@settings(max_examples=6, deadline=None)
+def test_decode_conservation_paged(seed, block_size, sched):
+    """Sim plane with block-granular KV accounting: reserved blocks are
+    conserved (admit = release), occupancy ≥ exact tokens at all times,
+    and a drained cluster holds zero blocks — the same invariants the
+    real paged engine's BlockPool enforces device-side."""
+    scfg = ServingConfig(num_decode_instances=2, decode_dp_per_instance=4,
+                         max_batch_per_dp=32, kv_budget_tokens=10**9,
+                         block_size=block_size)
+    spec = WorkloadSpec("d", 64, 4096, 1000.0, out_mean=30)
+    reqs = generate(spec, qps=500, duration=1, seed=seed)[:150]
+    sim = DecodeClusterSim(CFG, scfg, scheduler=sched)
+    sim.run(reqs, 60, closed_loop=32)
+    finished = [r for r in reqs if r.finish_time is not None]
+    for r in finished:
+        assert r.generated == r.output_len
+    live = [r for r in reqs if r.assigned_dp is not None
+            and r.finish_time is None]
+    # exact-token accounting is unchanged by paging
+    live_kv = sum(d.kv_tokens for d in sim.state.decode_dps)
+    assert live_kv == sum(r.input_len + r.generated for r in live)
+    # block accounting: reserved blocks == the live requests' lifetime
+    # reservations; occupancy dominates the exact token load
+    def blocks_for(r):
+        total = r.input_len + r.output_len
+        return -(-total // block_size)
+    live_blocks = sum(d.kv_blocks for d in sim.state.decode_dps)
+    assert live_blocks == sum(blocks_for(r) for r in live)
+    for d in sim.state.decode_dps:
+        assert d.kv_occupancy >= d.kv_tokens or not live
+    if not live:
+        assert live_blocks == 0
+
+
 def test_sbs_no_starvation_under_moderate_load():
     """With n_limit high, all requests of a finite burst complete (liveness)."""
     scfg = ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=2,

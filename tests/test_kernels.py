@@ -5,8 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    decode_attention, paged_decode_attention,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref,
+)
 from repro.kernels.flash_prefill.ops import flash_prefill
 from repro.kernels.flash_prefill.ref import flash_prefill_ref
 from repro.kernels.ssd_scan.ops import ssd_chunk_kernel_apply
@@ -99,6 +103,66 @@ def test_decode_attention_window_ring():
                        jnp.arange(S)[None], -1)
     o1 = decode_attention(q, kc, vc, kv_pos, pos, window=16, block_kv=32)
     o2 = decode_attention_ref(q, kc, vc, kv_pos, pos, window=16)
+    assert np.abs(np.asarray(o1 - o2)).max() < 1e-5
+
+
+@pytest.mark.paged
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,N,bs,nbt,H,K,hd", [
+    (3, 16, 16, 4, 4, 2, 32),
+    (2, 20, 32, 3, 8, 4, 16),
+    (1, 6, 64, 2, 2, 1, 64),
+])
+def test_paged_decode_attention_sweep(dtype, B, N, bs, nbt, H, K, hd):
+    """Block-table kernel (scalar-prefetched physical page ids) vs the
+    dense block-gather oracle, including -1 (null-block) table entries
+    and a polluted null block (its kv_pos must be unobservable)."""
+    rng = np.random.default_rng(0)
+    q = _rand(0, (B, H, hd), dtype)
+    k_pool = _rand(1, (N, bs, K, hd), dtype)
+    v_pool = _rand(2, (N, bs, K, hd), dtype)
+    # each row owns a random prefix of nbt distinct non-null pages
+    tabs = []
+    free = list(range(1, N))
+    rng.shuffle(free)
+    for b in range(B):
+        n_real = int(rng.integers(0, nbt + 1)) if b else nbt
+        row = [free.pop() for _ in range(n_real)] + [-1] * (nbt - n_real)
+        tabs.append(row)
+    block_tab = jnp.asarray(tabs, jnp.int32)
+    # kv_pos pool: valid ascending positions everywhere, INCLUDING the
+    # null block (simulating inactive-row scribbles) — table masking must
+    # hide it
+    kv_pos_pool = jnp.broadcast_to(
+        jnp.arange(bs, dtype=jnp.int32)[None], (N, bs)).copy()
+    pos = jnp.asarray([bs - 1] * B, jnp.int32)
+    o1 = paged_decode_attention(q, k_pool, v_pool, kv_pos_pool, block_tab,
+                                pos)
+    o2 = paged_decode_attention_ref(q, k_pool, v_pool, kv_pos_pool,
+                                    block_tab, pos)
+    assert np.abs(np.asarray(o1 - o2, np.float32)).max() < TOLS[dtype]
+
+
+@pytest.mark.paged
+def test_paged_decode_attention_matches_dense_gather():
+    """Kernel == flat decode_attention over the materialised gather (the
+    reference fallback the model path uses)."""
+    B, N, bs, nbt, H, K, hd = 2, 10, 16, 3, 4, 2, 32
+    q = _rand(0, (B, H, hd))
+    k_pool = _rand(1, (N, bs, K, hd))
+    v_pool = _rand(2, (N, bs, K, hd))
+    block_tab = jnp.asarray([[1, 4, -1], [7, -1, -1]], jnp.int32)
+    kv_pos_pool = jnp.broadcast_to(
+        jnp.arange(bs, dtype=jnp.int32)[None], (N, bs)).copy()
+    pos = jnp.asarray([bs - 1, 7], jnp.int32)
+    o1 = paged_decode_attention(q, k_pool, v_pool, kv_pos_pool, block_tab,
+                                pos)
+    safe = jnp.maximum(block_tab, 0)
+    kg = k_pool[safe].reshape(B, nbt * bs, K, hd)
+    vg = v_pool[safe].reshape(B, nbt * bs, K, hd)
+    kvg = jnp.where(block_tab[..., None] < 0, -1,
+                    kv_pos_pool[safe]).reshape(B, nbt * bs)
+    o2 = decode_attention(q, kg, vg, kvg, pos, block_kv=bs)
     assert np.abs(np.asarray(o1 - o2)).max() < 1e-5
 
 

@@ -1,0 +1,228 @@
+"""Property suite for the paged KV subsystem (offline-safe via
+tests/_hypothesis_shim).
+
+Three contract layers:
+  1. `BlockPool` allocator — random alloc/free sequences never leak or
+     double-allocate blocks, over-allocation raises, freed pages are
+     reusable (lowest-id-first, deterministically).
+  2. Cache surgery — `paged_cache_take(paged_cache_join(dst, src, slot),
+     slot)` round-trips token-exactly, including onto freshly REUSED
+     pages still holding a previous occupant's data.
+  3. The null block — inactive batch rows scatter into physical block 0
+     without perturbing live rows.
+"""
+import random
+
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.serving.kv_pool import (
+    NULL_BLOCK, BlockPool, OutOfBlocks, pad_block_table,
+)
+
+pytestmark = pytest.mark.paged
+
+
+# ---------------------------------------------------------------------------
+# 1. Allocator invariants
+# ---------------------------------------------------------------------------
+
+@given(
+    num_blocks=st.integers(2, 40),
+    block_size=st.sampled_from([1, 4, 16]),
+    ops=st.lists(st.tuples(st.booleans(), st.integers(0, 9)),
+                 min_size=1, max_size=60),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=40, deadline=None)
+def test_pool_never_leaks_or_double_allocates(num_blocks, block_size, ops,
+                                              seed):
+    """Drive a random alloc/free schedule; after every operation the pool
+    must conserve blocks exactly (free ⊎ used = all non-null blocks)."""
+    pool = BlockPool(num_blocks, block_size)
+    rng = random.Random(seed)
+    held = []                                   # list of alloc'd id-lists
+    for is_alloc, n in ops:
+        if is_alloc:
+            if n > pool.free_count:
+                with pytest.raises(OutOfBlocks):
+                    pool.alloc(n)
+            else:
+                ids = pool.alloc(n)
+                assert len(ids) == n
+                assert NULL_BLOCK not in ids
+                held.append(ids)
+        elif held:
+            ids = held.pop(rng.randrange(len(held)))
+            pool.free(ids)
+            with pytest.raises(ValueError):     # double-free must raise
+                pool.free(ids[:1] if ids else [0])
+        pool.check()
+        allocated = [b for lst in held for b in lst]
+        assert len(set(allocated)) == len(allocated), "double-allocated id"
+        assert pool.used_count == len(allocated)
+    for ids in held:
+        pool.free(ids)
+    pool.check()
+    assert pool.free_count == num_blocks - 1    # everything came back
+
+
+@given(n=st.integers(1, 20), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_freed_pages_are_reusable_lowest_first(n, seed):
+    """Freeing returns pages to circulation: a full drain/refill cycle
+    hands back exactly the same ids (deterministic lowest-first)."""
+    pool = BlockPool(32, 8)
+    first = pool.alloc(n)
+    rng = random.Random(seed)
+    scrambled = list(first)
+    rng.shuffle(scrambled)
+    pool.free(scrambled)
+    pool.check()
+    assert pool.alloc(n) == first
+
+
+def test_pool_rejects_degenerate_geometry():
+    with pytest.raises(ValueError):
+        BlockPool(1, 16)                        # only the null block
+    with pytest.raises(ValueError):
+        BlockPool(8, 0)
+    pool = BlockPool(4, 16)
+    with pytest.raises(ValueError):
+        pool.free([NULL_BLOCK])                 # the null block is eternal
+    with pytest.raises(ValueError):
+        pool.free([2])                          # never issued
+    assert pool.blocks_for(0) == 0
+    assert pool.blocks_for(1) == 1
+    assert pool.blocks_for(16) == 1
+    assert pool.blocks_for(17) == 2
+    assert pool.capacity_tokens == 3 * 16
+
+
+def test_pad_block_table():
+    assert pad_block_table([3, 5], 4) == [3, 5, -1, -1]
+    assert pad_block_table([], 2) == [-1, -1]
+    with pytest.raises(ValueError):
+        pad_block_table([1, 2, 3], 2)
+
+
+# ---------------------------------------------------------------------------
+# 2. Cache-surgery round trip (join -> take is token-exact)
+# ---------------------------------------------------------------------------
+
+MAX_LEN, BS = 64, 16
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    import jax
+    import jax.numpy as jnp
+    from repro.config import get_arch
+    from repro.models import init_cache, init_params, prefill_chunk
+
+    cfg = get_arch("deepseek-7b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def prefill(ids):
+        cache = init_cache(cfg, 1, MAX_LEN)
+        for i in range(0, len(ids), 16):
+            arr = jnp.asarray([ids[i:i + 16]], jnp.int32)
+            logits, cache = prefill_chunk(cfg, params, arr, cache)
+        return int(jnp.argmax(logits[0])), cache
+
+    return cfg, params, prefill
+
+
+def _assert_roundtrip(cfg, src, taken):
+    """taken == src on every VALID kv position (invalid slots may differ:
+    the pool reuses pages and never scrubs them)."""
+    import jax
+    import numpy as np
+
+    src_pos = np.asarray(src["kv_pos"][0])
+    out_pos = np.asarray(taken["kv_pos"][0])
+    np.testing.assert_array_equal(out_pos, src_pos)
+    assert int(taken["cur"][0]) == int(src["cur"][0])
+    valid = src_pos >= 0
+
+    def check(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.ndim >= 3 and a.shape[2] == src_pos.shape[0]:   # (n,1,S,...)
+            np.testing.assert_array_equal(a[:, :, valid], b[:, :, valid])
+        else:
+            np.testing.assert_array_equal(a, b)
+
+    jax.tree.map(check, src["blocks"], taken["blocks"])
+
+
+@given(
+    lengths=st.lists(st.integers(1, MAX_LEN - 1), min_size=1, max_size=3),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=5, deadline=None)
+def test_join_take_roundtrip_token_exact(paged_setup, lengths, seed):
+    """cache_take(cache_join(dst, src, slot), slot) recovers src exactly,
+    for several requests sharing one pool — including pages reused from
+    earlier (freed) occupants."""
+    import jax.numpy as jnp
+    from repro.models import (
+        init_paged_cache, paged_cache_clear_slot, paged_cache_join,
+        paged_cache_take,
+    )
+
+    cfg, params, prefill = paged_setup
+    rng = random.Random(seed)
+    slots, nbt = 4, MAX_LEN // BS
+    pool = BlockPool(2 * nbt + 1, BS)
+    pc = init_paged_cache(cfg, slots, pool.num_blocks, MAX_LEN, BS)
+    for i, L in enumerate(lengths):
+        ids = [rng.randrange(cfg.vocab_size) for _ in range(L)]
+        _, src = prefill(ids)
+        blocks = pool.alloc(pool.blocks_for(L))
+        slot = i % slots
+        tab = jnp.asarray(pad_block_table(blocks, nbt), jnp.int32)
+        pc = paged_cache_join(cfg, pc, src, slot, tab)
+        taken = paged_cache_take(cfg, pc, slot)
+        _assert_roundtrip(cfg, src, taken)
+        # free + clear: the next iteration reuses these very pages
+        pc = paged_cache_clear_slot(pc, slot)
+        pool.free(blocks)
+        pool.check()
+    assert pool.free_count == pool.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# 3. Null-block isolation
+# ---------------------------------------------------------------------------
+
+def test_inactive_rows_cannot_perturb_live_rows(paged_setup):
+    """Rows with an empty block table (inactive slots) scatter into the
+    null block every step; a co-resident live row's generation must be
+    bit-identical to running alone."""
+    import jax.numpy as jnp
+    from repro.models import (
+        init_paged_cache, paged_cache_join, paged_decode_step,
+    )
+
+    cfg, params, prefill = paged_setup
+    rng = random.Random(7)
+    ids = [rng.randrange(cfg.vocab_size) for _ in range(21)]
+    t0, src = prefill(ids)
+
+    def run(slots):
+        pool = BlockPool(8, BS)
+        pc = init_paged_cache(cfg, slots, 8, MAX_LEN, BS)
+        tab = jnp.asarray(
+            pad_block_table(pool.alloc(pool.blocks_for(21 + 4)),
+                            MAX_LEN // BS), jnp.int32)
+        pc = paged_cache_join(cfg, pc, src, 0, tab)
+        toks, nxt = [t0], [t0] + [9] * (slots - 1)   # garbage in dead rows
+        for _ in range(4):
+            lg, pc = paged_decode_step(
+                cfg, params, jnp.asarray([[t] for t in nxt], jnp.int32), pc)
+            t = int(jnp.argmax(lg[0]))
+            toks.append(t)
+            nxt[0] = t
+        return toks
+
+    assert run(1) == run(5)
