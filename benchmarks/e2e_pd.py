@@ -11,6 +11,7 @@ and a shorter horizon per scenario.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional
 
 from repro.config import ServingConfig, get_arch
@@ -24,11 +25,17 @@ BURSTY = WorkloadSpec("e2e-bursty", 64, 3000, 1000.0, out_mean=120,
                       burst_factor=3.0, burst_duty=0.25, burst_period=2.0)
 HEAVY = WorkloadSpec("e2e-heavy", 64, 32768, 2000.0, out_mean=120,
                      sigma=1.6)
+# multi-tenant Zipf system prompts — the prefix-cache scenario: the
+# cache-aware sim pipeline credits hit prefixes against chunk capacity
+# and prices the skipped FLOPs (prefill_flops_saved in the report)
+SHARED = WorkloadSpec("e2e-shared", 256, 3000, 1000.0, out_mean=120,
+                      n_tenants=24, tenant_zipf=1.2, tenant_prefix_len=384)
 
 SCENARIOS = (
     ("steady", STEADY, (40, 70)),
     ("bursty", BURSTY, (40, 70)),
     ("heavy_tail", HEAVY, (20, 35)),
+    ("shared_prefix", SHARED, (40, 70)),
 )
 
 JSON_PAYLOAD: Optional[Dict] = None
@@ -110,12 +117,16 @@ def main(report, quick: bool = False) -> List[str]:
         report(f"### scenario: {scen}")
         report(f"{'scheduler':>12} {'qps':>5}  result")
         payload[scen] = {}
+        tenanted = spec.n_tenants > 0
+        run_scfg = (dataclasses.replace(scfg, cache_aware=True)
+                    if tenanted else scfg)
         for qps in qpss:
             ttft = {}
             payload[scen][str(qps)] = {}
             for sched in ("immediate", "sbs", "sbs-la"):
-                reqs = generate(spec, qps=qps, duration=duration, seed=11)
-                sim = PDClusterSim(cfg, scfg, scheduler=sched)
+                reqs = generate(spec, qps=qps, duration=duration, seed=11,
+                                with_tokens=tenanted)
+                sim = PDClusterSim(cfg, run_scfg, scheduler=sched)
                 rep = sim.run(reqs, duration, slo_e2e=15.0)
                 ttft[sched] = rep.ttft_mean
                 payload[scen][str(qps)][sched] = rep.json_row()

@@ -59,4 +59,42 @@ def main(report) -> List[str]:
     us = _time(bench_radix) / 64
     report(f"{'radix match (512 tokens)':>34} {us:>10.1f}")
     rows.append(f"micro/radix_match_512,{us:.1f},")
+
+    # BlockPool free store: heapq (current) vs the sorted-list it
+    # replaced.  Both are deterministic lowest-id-first; the access
+    # pattern that matters is serving churn — small per-request
+    # alloc/free against a LARGE mostly-free pool, where the list
+    # re-sorts the whole store on every free (O(N log N)) and copies it
+    # on every alloc (O(N)), while the heap pays O(req log N).
+    from repro.serving.kv_pool import BlockPool
+
+    N_BLOCKS, REQ_BLOCKS, ROUNDS = 65536, 8, 256
+
+    class _SortedListStore:
+        """The pre-heap free store, inlined for comparison."""
+        def __init__(self, num_blocks):
+            self.free = list(range(1, num_blocks))
+        def alloc(self, n):
+            out, self.free = self.free[:n], self.free[n:]
+            return out
+        def free_blocks(self, ids):
+            self.free = sorted(self.free + list(ids))
+
+    def _churn(alloc, free):
+        crng = random.Random(42)
+        held = []
+        for _ in range(ROUNDS):
+            held.append(alloc(REQ_BLOCKS))
+            if len(held) > 64:
+                free(held.pop(crng.randrange(len(held))))
+
+    pool = BlockPool(N_BLOCKS, 16)
+    store = _SortedListStore(N_BLOCKS)
+    for name, fn in (
+            ("pool_heap", lambda: _churn(pool.alloc, pool.free)),
+            ("pool_sorted", lambda: _churn(store.alloc,
+                                           store.free_blocks))):
+        us = _time(fn, reps=5)
+        report(f"{f'{name} churn (8-blk reqs, 64K pool)':>34} {us:>10.1f}")
+        rows.append(f"micro/{name}_churn_64k,{us:.1f},")
     return rows

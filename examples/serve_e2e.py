@@ -16,6 +16,12 @@ more concurrent decode requests; `--bench-json` records the comparison
 in the bench payload's `real_plane` section.  Exits non-zero if any
 request fails to finish within the timeout, or if the paged plane does
 not win the comparison (used by `scripts/ci.sh --real-smoke`).
+
+`--prefix-bench` runs the shared-prefix A/B instead: multi-tenant
+repeat-heavy traffic served twice at EQUAL KV memory — prefix caching
+off, then on (refcounted page sharing + COW).  Requires the cached run
+to post a lower TTFT p99 and > 0 prefill FLOPs saved, and records both
+sides in the payload's `real_plane_prefix` section.
 """
 import argparse
 import json
@@ -85,6 +91,105 @@ def run_sweep(label, cfg, params, scfg, fresh, args):
     return ok, peaks
 
 
+def run_prefix_bench(cfg, params, args):
+    """Shared-prefix A/B on the real plane: same tenanted workload, same
+    KV memory, prefix caching off vs on.  Returns (ok, report-section).
+
+    One prefill instance (SBS staggers dispatch windows per instance, so
+    a single instance makes every repeat resolve against the binder that
+    actually holds its pages); three tenant system prompts recycled
+    round-robin so most requests after the first wave are block-aligned
+    prefix (or exact full-prompt) hits."""
+    from repro.serving.costmodel import CostModel
+    from repro.serving.metrics import percentile
+
+    bs = args.block_size or 16
+    scfg = ServingConfig(
+        num_prefill_instances=1, prefill_dp_per_instance=2,
+        num_decode_instances=1, decode_dp_per_instance=2,
+        chunk_size=32, t_default=0.05, l_net=0.001,
+        max_batch_per_dp=args.max_batch_per_dp, block_size=bs)
+    rng = random.Random(args.seed)
+    # one fixed prompt per tenant: every request after the first wave is
+    # an exact repeat of its tenant's prompt — a FULL prefix hit, so the
+    # cached plane answers it without running a single prefill chunk
+    prompts = [tuple(rng.randrange(cfg.vocab_size)
+                     for _ in range(96 + 8 + t)) for t in range(3)]
+    order = [i % len(prompts) for i in range(args.requests)]
+    # prefill on this plane is seconds per request (CPU wall-clock), so
+    # repeats must arrive AFTER their tenant's first prompt completes
+    # and publishes its pages — space arrivals accordingly
+    spacing = max(args.arrival_spacing, 1.5)
+
+    def fresh():
+        return [Request(rid=i, arrival_time=i * spacing,
+                        input_len=len(prompts[t]),
+                        output_len=args.max_new, tokens=prompts[t])
+                for i, t in enumerate(order)]
+
+    warm_toks = tuple(rng.randrange(cfg.vocab_size) for _ in range(100))
+    cost = CostModel(cfg)
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN,
+                      max_batch=args.max_batch_per_dp, max_new=args.max_new,
+                      block_size=bs,
+                      decode_slots=scfg.resolved_decode_slots)
+    print(f"\n#### prefix-cache A/B: {args.requests} requests, 3 tenants "
+          f"x 96-token prompts, block_size={bs}")
+    ok = True
+    section = {"block_size": bs, "requests": args.requests}
+    for mode in ("uncached", "cached"):
+        srv = RealSBSServer(cfg, params, serving_cfg=scfg, scheduler="sbs",
+                            max_len=MAX_LEN, max_new=args.max_new, spec=spec,
+                            prefix_cache=(mode == "cached"))
+        # warmup compiles every jitted shape outside the timed window
+        srv.serve([Request(rid=999, arrival_time=0.0, input_len=100,
+                           output_len=args.max_new, tokens=warm_toks)],
+                  timeout=args.timeout)
+        pre = srv.prefix_stats()
+        gens = srv.serve(fresh(), timeout=args.timeout)
+        post = srv.prefix_stats()
+        if len(gens) < args.requests:
+            print(f"  {mode}: UNFINISHED "
+                  f"({len(gens)}/{args.requests})")
+            ok = False
+        ttfts = [g.ttft for g in gens]
+        # the first wave (one request per tenant) is cold in BOTH modes
+        # by construction; the caching claim is about the steady state,
+        # so the headline p99 is over the repeat-eligible requests
+        steady = [g.ttft for g in gens if g.rid >= len(prompts)]
+        hit = post["prefix_hit_tokens"] - pre["prefix_hit_tokens"]
+        seen = post["prefix_seen_tokens"] - pre["prefix_seen_tokens"]
+        section[mode] = {
+            "ttft_mean": sum(ttfts) / max(len(ttfts), 1),
+            "ttft_p99": percentile(steady, 99) if steady else 0.0,
+            "ttft_p99_all": percentile(ttfts, 99) if ttfts else 0.0,
+            "prefix_hit_rate": hit / seen if seen else 0.0,
+            "prefill_flops_saved": cost.prefill_flops(hit),
+            "prefill_chunks_run": (post["prefill_chunks_run"]
+                                   - pre["prefill_chunks_run"]),
+            "decode_blocks_shared": (post["decode_blocks_shared"]
+                                     - pre["decode_blocks_shared"]),
+        }
+        s = section[mode]
+        print(f"  {mode:>9}: ttft_p99={s['ttft_p99']*1000:7.1f}ms "
+              f"mean={s['ttft_mean']*1000:7.1f}ms "
+              f"hit={s['prefix_hit_rate']*100:5.1f}% "
+              f"chunks={s['prefill_chunks_run']} "
+              f"saved={s['prefill_flops_saved']:.2e} FLOPs")
+    if ok:
+        c, u = section["cached"], section["uncached"]
+        if not (c["prefill_flops_saved"] > 0
+                and c["ttft_p99"] < u["ttft_p99"]):
+            print("  prefix-cache gate FAILED: need flops_saved > 0 and "
+                  "cached ttft_p99 < uncached ttft_p99")
+            ok = False
+        else:
+            print(f"  gate OK: ttft_p99 "
+                  f"{(1 - c['ttft_p99'] / u['ttft_p99']) * 100:+.1f}% "
+                  f"vs uncached")
+    return ok, section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -104,6 +209,10 @@ def main():
     ap.add_argument("--bench-json", default=None,
                     help="record the real-plane comparison into this "
                          "benchmark payload (e.g. BENCH_e2e.json)")
+    ap.add_argument("--prefix-bench", action="store_true",
+                    help="run the shared-prefix caching A/B (equal KV "
+                         "memory, caching off vs on) instead of the "
+                         "scheduler sweep")
     args = ap.parse_args()
     if args.compare_padded and not args.block_size:
         ap.error("--compare-padded needs a paged plane (--block-size > 0); "
@@ -112,6 +221,24 @@ def main():
 
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.prefix_bench:
+        ok, section = run_prefix_bench(cfg, params, args)
+        if args.bench_json:
+            payload = {}
+            if os.path.exists(args.bench_json):
+                try:
+                    with open(args.bench_json) as f:
+                        payload = json.load(f)
+                except (OSError, ValueError):
+                    payload = {}
+            payload["real_plane_prefix"] = section
+            with open(args.bench_json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"\nupdated {os.path.abspath(args.bench_json)} "
+                  f"[real_plane_prefix]")
+        sys.exit(0 if ok else 1)
+
     fresh = make_requests(args.requests, cfg, args.max_new, args.seed,
                           args.arrival_spacing)
     print(f"serving {args.requests} requests on {cfg.name}")

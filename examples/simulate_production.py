@@ -6,11 +6,12 @@ heavy-tail traffic scenarios on the unified ClusterRuntime.
     PYTHONPATH=src python examples/simulate_production.py [--quick]
 """
 import argparse
+import dataclasses
 
 from repro.config import ServingConfig, get_arch
 from repro.serving.cluster import DecodeClusterSim, PrefillClusterSim
 from repro.serving.workload import (
-    BURSTY, HEAVY_TAIL, SHORT, WorkloadSpec, generate,
+    BURSTY, HEAVY_TAIL, SHARED_PREFIX, SHORT, WorkloadSpec, generate,
 )
 
 
@@ -43,6 +44,20 @@ def main():
             line.append(f"{sched}: ttft={rep.ttft_mean*1000:7.1f}ms "
                         f"p99={rep.ttft_p99*1000:7.1f}ms")
         print("   ".join(line))
+
+    print("\n== Prefill: shared_prefix (Zipf multi-tenant system prompts) ==")
+    for label, c in (("sbs", scfg),
+                     ("sbs+cache", dataclasses.replace(scfg,
+                                                       cache_aware=True))):
+        reqs = generate(SHARED_PREFIX, qps=100, duration=dur, seed=3,
+                        with_tokens=True)
+        sim = PrefillClusterSim(cfg, c, scheduler="sbs")
+        rep = sim.run(reqs, dur)
+        cache = getattr(sim.sched, "cache", None)
+        hr = cache.hit_rate if cache is not None else 0.0
+        print(f"{label:>10} ttft={rep.ttft_mean*1000:7.1f}ms "
+              f"p99={rep.ttft_p99*1000:7.1f}ms "
+              f"util={rep.chunk_util*100:4.1f}% hit={hr*100:4.1f}%")
 
     print("\n== Decode: DP=32, EP=32, closed-loop batch ≈ 35/DP ==")
     dcfg = ServingConfig(num_decode_instances=1, decode_dp_per_instance=32,

@@ -7,9 +7,13 @@ for any (scenario, qps, scheduler) pair present in both files.
 
 Only metric dicts carrying both `ttft_p99` and `throughput` are compared
 (auxiliary payload sections such as `real_plane` / `paged_concurrency`
-are informational and skipped).  The sims are deterministic, so the
-threshold guards real scheduling/cost-model regressions, not noise —
-but --quick baselines must be compared against --quick runs.
+are informational and skipped).  Rows whose baseline carries a positive
+`prefix_hit_rate` (the shared_prefix scenario) are additionally guarded
+against the cache-hit rate dropping by more than the threshold — a
+silent loss of page reuse fails the build like a latency regression
+would.  The sims are deterministic, so the threshold guards real
+scheduling/cost-model regressions, not noise — but --quick baselines
+must be compared against --quick runs.
 """
 from __future__ import annotations
 
@@ -87,9 +91,15 @@ def main() -> int:
             verdicts.append(f"ttft_p99 {ttft_ratio - 1:+.1%}")
         if thr_ratio < 1.0 - args.threshold:
             verdicts.append(f"throughput {thr_ratio - 1:+.1%}")
+        hit_note = ""
+        if b.get("prefix_hit_rate", 0.0) > 0.0:
+            hit_ratio = f_.get("prefix_hit_rate", 0.0) / b["prefix_hit_rate"]
+            hit_note = f" hit x{hit_ratio:.3f}"
+            if hit_ratio < 1.0 - args.threshold:
+                verdicts.append(f"prefix_hit_rate {hit_ratio - 1:+.1%}")
         status = "FAIL " + ", ".join(verdicts) if verdicts else "ok"
         print(f"  {name:<44} ttft_p99 x{ttft_ratio:.3f} "
-              f"thr x{thr_ratio:.3f}  {status}")
+              f"thr x{thr_ratio:.3f}{hit_note}  {status}")
         if verdicts:
             failures.append((name, verdicts))
 

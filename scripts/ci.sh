@@ -35,6 +35,13 @@ if [[ "${1:-}" == "--real-smoke" ]]; then
         || { echo "real smoke FAILED (unfinished requests, paged <= padded" \
                   "concurrency, or >150s)" >&2
              exit 1; }
+    echo "== real-plane prefix-cache A/B (shared tenants, 300s budget) =="
+    PYTHONPATH=src timeout 300 python examples/serve_e2e.py \
+        --requests 10 --max-new 4 --timeout 150 \
+        --prefix-bench --bench-json BENCH_e2e.json \
+        || { echo "prefix smoke FAILED (no FLOPs saved, cached ttft_p99" \
+                  "not lower, unfinished requests, or >300s)" >&2
+             exit 1; }
     echo "REAL SMOKE OK"
     exit 0
 fi

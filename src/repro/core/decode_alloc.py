@@ -13,9 +13,30 @@ Requests are pre-sorted by total sequence length descending
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.types import DecodeDPState, Request
+
+# cache-aware placement hook: affinity(req, unit) -> matched prefix tokens
+# already resident on that unit (0 = no preference)
+AffinityFn = Callable[[Request, DecodeDPState], int]
+
+
+def _best_affinity(req: Request, units: Sequence[DecodeDPState],
+                   affinity: Optional[AffinityFn]
+                   ) -> Optional[DecodeDPState]:
+    """Cache-aware placement: among `units`, the one holding the longest
+    cached prefix of `req` — ties broken by least ⟨kv_occupancy, batch⟩
+    so reuse never concentrates load on one hot unit.  None when no unit
+    holds any prefix (fall through to the load-based policy)."""
+    if affinity is None:
+        return None
+    scored = [(affinity(req, u), u) for u in units]
+    best_hit = max(s for s, _ in scored)
+    if best_hit <= 0:
+        return None
+    cands = [u for s, u in scored if s == best_hit]
+    return min(cands, key=lambda u: (u.kv_occupancy, u.batch))
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -90,6 +111,7 @@ def schedule_decode_global(
     units: Sequence[DecodeDPState],
     k: float = 1.5,
     exclude_instances: frozenset = frozenset(),
+    affinity: Optional[AffinityFn] = None,
 ) -> Dict[int, List[Request]]:
     """Batched decode placement that balances per-DP KV-TOKEN load (not
     just request count) across DP units within an instance AND across
@@ -103,6 +125,12 @@ def schedule_decode_global(
     population exactly as in `iqr_safe_set`.  `exclude_instances` removes
     quarantined (watchdog-expired) instances from the decision space; if
     that empties it, the exclusion is ignored rather than dropping work.
+
+    `affinity`, when given, is the cache-aware override (§context
+    caching): a safe unit already holding a prefix of the request wins
+    over the load order — joining there points at resident pages instead
+    of re-copying KV, and a longer match beats a shorter one.  Load-based
+    placement is the tie-break and the fallback when nothing matches.
     """
     eligible = [u for u in units if u.instance_id not in exclude_instances]
     if not eligible:
@@ -114,17 +142,21 @@ def schedule_decode_global(
     order = sorted(requests, key=lambda r: -(r.input_len + r.output_len))
     for req in order:
         safe = iqr_safe_set(eligible, k)
-        by_inst: Dict[int, List[DecodeDPState]] = {}
-        for u in safe:
-            by_inst.setdefault(u.instance_id, []).append(u)
-        # level-1 load is the mean over ALL the instance's units — masked
-        # (saturated) units still pace its sync barrier, so hiding them
-        # would make a hot instance look cold and attract traffic.  Loads
-        # are kv_occupancy so paged fragmentation is balanced, not hidden.
-        inst = min(by_inst, key=lambda i: (
-            sum(u.kv_occupancy for u in all_of[i]) / len(all_of[i]),
-            sum(u.batch for u in all_of[i]) / len(all_of[i])))
-        best = min(by_inst[inst], key=lambda u: (u.kv_occupancy, u.batch))
+        best = _best_affinity(req, safe, affinity)
+        if best is None:
+            by_inst: Dict[int, List[DecodeDPState]] = {}
+            for u in safe:
+                by_inst.setdefault(u.instance_id, []).append(u)
+            # level-1 load is the mean over ALL the instance's units —
+            # masked (saturated) units still pace its sync barrier, so
+            # hiding them would make a hot instance look cold and attract
+            # traffic.  Loads are kv_occupancy so paged fragmentation is
+            # balanced, not hidden.
+            inst = min(by_inst, key=lambda i: (
+                sum(u.kv_occupancy for u in all_of[i]) / len(all_of[i]),
+                sum(u.batch for u in all_of[i]) / len(all_of[i])))
+            best = min(by_inst[inst],
+                       key=lambda u: (u.kv_occupancy, u.batch))
         best.admit(req.input_len + req.generated,
                    reserve_len=req.input_len + req.output_len)
         req.assigned_dp = best.dp_id
@@ -141,11 +173,22 @@ def schedule_decode_immediate(
     units: Sequence[DecodeDPState],
     policy: str = "round_robin",
     rr_state: Optional[List[int]] = None,
+    affinity: Optional[AffinityFn] = None,
 ) -> Dict[int, List[Request]]:
     """Baselines: round_robin | least_batch | least_kv. No global window —
-    each request is placed in arrival order with instantaneous state only."""
+    each request is placed in arrival order with instantaneous state only.
+    `affinity` adds cache-aware placement on top: a unit holding a cached
+    prefix wins outright (round-robin state does NOT advance for such a
+    request — the rotation resumes where it left off)."""
     out: Dict[int, List[Request]] = {}
     for req in requests:
+        u = _best_affinity(req, units, affinity)
+        if u is not None:
+            u.admit(req.input_len + req.generated,
+                    reserve_len=req.input_len + req.output_len)
+            req.assigned_dp = u.dp_id
+            out.setdefault(u.dp_id, []).append(req)
+            continue
         if policy == "round_robin":
             assert rr_state is not None
             u = units[rr_state[0] % len(units)]

@@ -26,6 +26,12 @@ def _cache_hit(req: Request, dp: DPState,
                cache: Optional[PrefixCacheIndex]) -> int:
     if cache is None or req.tokens is None:
         return 0
+    if getattr(cache, "first_dispatch_only", False) and (
+            req.assigned_dp is not None):
+        # engine-backed index (real plane): the hit was CLAIMED as live
+        # pages at first dispatch — later chunks of a pinned request must
+        # not be re-credited against pages it already points at
+        return 0
     return cache.match(dp.dp_id, req.tokens, limit=req.remaining_prefill)
 
 
@@ -61,6 +67,9 @@ def greedy_dispatch(
                 best, best_cap, best_hit = d, cap, hit
         # line 8: dispatch only if the target still has headroom
         if best is not None and avail[best.dp_id] > 0:
+            if cache is not None and req.assigned_dp is None:
+                # hit-rate accounting, once per request at first grant
+                cache.record(best_hit, req.remaining_prefill)
             cost = req.remaining_prefill - best_hit
             grant = min(cost, avail[best.dp_id]) if allow_chunking else cost
             assignments.setdefault(best.dp_id, []).append((req, grant))

@@ -250,12 +250,21 @@ class DecodeScheduler:
     excludes quarantined instances. Quarantine lifts on a healthy step or
     after one further budget of probation (a drained instance receives no
     work, so the next placement is what re-probes its health). The budget
-    is not enforced until at least one real step time has been observed."""
+    is not enforced until at least one real step time has been observed.
+
+    `prefix_cache`, when given, makes placement CACHE-AWARE: the
+    scheduler tracks which prompts each decode DP has hosted (a
+    token-level `PrefixCacheIndex`, the same reuse model the sim plane
+    and the real engines' page binders share) and prefers the DP holding
+    the longest cached prefix of a new request — tie-broken by
+    ⟨kv_occupancy, batch⟩ — for both the batched allocators and the
+    immediate baseline."""
 
     def __init__(self, state: GlobalState, mode: str = "sbs",
                  policy: str = "round_robin", iqr_k: float = 1.5,
                  window: float = 0.05, alloc: str = "lex",
-                 watchdog_multiplier: float = 0.0):
+                 watchdog_multiplier: float = 0.0,
+                 prefix_cache: Optional[PrefixCacheIndex] = None):
         if alloc not in ("lex", "load_aware"):
             raise ValueError(alloc)
         self.state = state
@@ -264,6 +273,7 @@ class DecodeScheduler:
         self.iqr_k = iqr_k
         self.window = window
         self.alloc = alloc
+        self.cache = prefix_cache
         self.buffer: List[Request] = []
         self._rr = [0]
         self._last = -float("inf")
@@ -286,23 +296,49 @@ class DecodeScheduler:
         self._quarantined_at.clear()
         self.quarantined.clear()    # idle between runs: re-probe on place
 
+    def _affinity(self, req: Request, unit) -> int:
+        """Cached-prefix tokens of `req` resident on `unit` (0 = none)."""
+        if self.cache is None or req.tokens is None:
+            return 0
+        return self.cache.match(unit.dp_id, req.tokens,
+                                limit=req.input_len)
+
+    def _note_placed(self, out: Optional[Dict]) -> None:
+        """Track placements in the scheduler-side reuse model: the DP the
+        request joins will hold its prompt's KV (real plane: published
+        into the DP's page binder at join)."""
+        if self.cache is None or not out:
+            return
+        for dp_id, reqs in out.items():
+            for r in reqs:
+                if r.tokens is not None:
+                    self.cache.insert(dp_id, r.tokens[:r.input_len])
+
     def _allocate(self, batch: List[Request]) -> Dict:
+        aff = self._affinity if self.cache is not None else None
         if self.alloc == "load_aware":
-            return schedule_decode_global(
+            out = schedule_decode_global(
                 batch, self.state.decode_dps, self.iqr_k,
-                exclude_instances=frozenset(self.quarantined))
-        units = [u for u in self.state.decode_dps
-                 if u.instance_id not in self.quarantined]
-        return schedule_decode_batch(batch, units or self.state.decode_dps,
-                                     self.iqr_k)
+                exclude_instances=frozenset(self.quarantined),
+                affinity=aff)
+        else:
+            units = [u for u in self.state.decode_dps
+                     if u.instance_id not in self.quarantined]
+            out = schedule_decode_batch(
+                batch, units or self.state.decode_dps, self.iqr_k)
+        self._note_placed(out)
+        return out
 
     def on_handoff(self, req: Request, now: float) -> Optional[Dict]:
         """Prefill finished (KV arrived over the P/D transfer — simulated
         delay or real cache handoff); route into a decode DP. Immediate
         mode places right away, SBS buffers until the window tick."""
         if self.mode == "immediate":
-            return schedule_decode_immediate(
-                [req], self.state.decode_dps, self.policy, self._rr)
+            out = schedule_decode_immediate(
+                [req], self.state.decode_dps, self.policy, self._rr,
+                affinity=self._affinity if self.cache is not None else None)
+            self._note_placed(out)
+            return out
         self.buffer.append(req)
         return None
 

@@ -429,6 +429,117 @@ def block_extend(p, x, kind: LayerKind, cfg: ModelConfig, cache_entry,
 
 
 # ---------------------------------------------------------------------------
+# Paged chunk-extend (page-native prefill: chunks write straight into the
+# BlockPool pages a finished request will hand to decode, so there is no
+# dense staging cache and no handoff-realization scatter)
+# ---------------------------------------------------------------------------
+
+def _paged_write_sites(block_tab, positions, block_size):
+    """Per-token physical (block, offset) write sites for a chunk.
+    block_tab (B, nbt); positions (B, Sc).  Positions past the table (or
+    rows with unset logical blocks) write into the reserved null block."""
+    nbt = block_tab.shape[1]
+    lb = jnp.clip(positions // block_size, 0, nbt - 1)       # (B, Sc)
+    phys = jnp.take_along_axis(block_tab, lb, axis=1)        # (B, Sc)
+    return jnp.maximum(phys, 0), positions % block_size
+
+
+def attn_extend_paged(p, x, cfg: ModelConfig, k_pool, v_pool, kv_pos_pool,
+                      block_tab, positions):
+    """Chunk extend against a paged pool: scatter the chunk's K/V into the
+    row's physical blocks, then attend q over the block-table gather of
+    the whole pool view — earlier-chunk (and shared-prefix) KV is read
+    THROUGH the table, exactly like `attn_decode_paged`, with
+    `attn_extend`'s position masking for intra-chunk causality."""
+    window = cfg.sliding_window if cfg.attention == AttentionKind.SWA else 0
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["w_v"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    phys, off = _paged_write_sites(block_tab, positions, k_pool.shape[1])
+    k_pool = k_pool.at[phys, off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v.astype(v_pool.dtype))
+    kv_pos_pool = kv_pos_pool.at[phys, off].set(positions)
+    kg = A.gather_paged(k_pool, block_tab)                   # (B, nbt*bs, ...)
+    vg = A.gather_paged(v_pool, block_tab)
+    kv_pos_g = A.gather_paged_pos(kv_pos_pool, block_tab)
+    S_view = kg.shape[1]
+    o = A.flash_attention_xla(
+        q, kg, vg, positions, kv_pos_g,
+        causal=True, window=window,
+        block=min(FLASH_BLOCK, S_view)) if S_view > FLASH_THRESHOLD else None
+    if o is None:
+        mask = A.build_mask(positions, kv_pos_g, causal=True, window=window)
+        mask &= (kv_pos_g >= 0)[:, None, :]
+        o = A.gqa_reference(q, kg, vg, mask)
+    out = jnp.einsum("bshe,hed->bsd", o, p["w_o"])
+    return out, (k_pool, v_pool, kv_pos_pool)
+
+
+def mla_extend_paged(p, x, cfg: ModelConfig, ckv_pool, kr_pool, kv_pos_pool,
+                     block_tab, positions):
+    """Chunk extend for MLA (absorbed form) over paged latent pools."""
+    m = cfg.mla
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)            # (B,Sc,H,·)
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
+                   cfg.norm_eps)
+    kr = apply_rope(
+        jnp.einsum("bsd,de->bse", x, p["w_kr"])[:, :, None, :], positions,
+        cfg.rope_theta)[:, :, 0]
+    phys, off = _paged_write_sites(block_tab, positions, ckv_pool.shape[1])
+    ckv_pool = ckv_pool.at[phys, off].set(ckv.astype(ckv_pool.dtype))
+    kr_pool = kr_pool.at[phys, off].set(kr.astype(kr_pool.dtype))
+    kv_pos_pool = kv_pos_pool.at[phys, off].set(positions)
+    ckv_g = A.gather_paged(ckv_pool, block_tab)
+    kr_g = A.gather_paged(kr_pool, block_tab)
+    kv_pos_g = A.gather_paged_pos(kv_pos_pool, block_tab)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, p["w_uk"]) * scale
+    s = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                   ckv_g.astype(jnp.float32))
+    s += jnp.einsum("bshd,btd->bhst", (q_rope * scale).astype(jnp.float32),
+                    kr_g.astype(jnp.float32))
+    valid = (kv_pos_g >= 0)[:, None, None, :] & \
+        (kv_pos_g[:, None, None, :] <= positions[:, None, :, None])
+    s = jnp.where(valid, s, A.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(valid.any(-1)[..., None], w, 0.0)
+    ctx = jnp.einsum("bhst,btr->bshr", w.astype(ckv_g.dtype), ckv_g)
+    o = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"])
+    out = jnp.einsum("bshe,hed->bsd", o, p["w_o"])
+    return out, (ckv_pool, kr_pool, kv_pos_pool)
+
+
+def block_extend_paged(p, x, kind: LayerKind, cfg: ModelConfig, cache_entry,
+                       kv_pos_pool, block_tab, positions):
+    """Chunked-prefill block step writing into paged pools.  Page-native
+    prefill is attention-only (per-slot SSM / encoder state has no page
+    representation — those configs keep the dense staging path)."""
+    if kind not in (LayerKind.DENSE, LayerKind.MOE) or "xattn" in p:
+        raise ValueError("paged prefill supports attention-only layers")
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv = cache_entry
+    if cfg.attention == AttentionKind.MLA:
+        y, new3 = mla_extend_paged(p["attn"], h, cfg, kv[0], kv[1],
+                                   kv_pos_pool, block_tab, positions)
+    else:
+        y, new3 = attn_extend_paged(p["attn"], h, cfg, kv[0], kv[1],
+                                    kv_pos_pool, block_tab, positions)
+    new_entry, kv_pos_pool = (new3[0], new3[1]), new3[2]
+    x = x + y
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = moe_block(h, p["moe"], cfg.moe)
+        x = x + y
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    return x, new_entry, kv_pos_pool
+
+
+# ---------------------------------------------------------------------------
 # Block-level apply
 # ---------------------------------------------------------------------------
 

@@ -509,6 +509,160 @@ def paged_decode_step(cfg: ModelConfig, params, token, cache):
     return logits, new_cache
 
 
+def _require_pageable_prefill(cfg: ModelConfig) -> None:
+    if cfg.is_encoder_decoder:
+        raise ValueError(
+            f"{cfg.name}: page-native prefill is attention-only "
+            f"(encoder state has no page representation)")
+    for _key, kind, _n in _cache_groups(cfg):
+        if not _is_attn_kind(kind):
+            raise ValueError(
+                f"{cfg.name}: page-native prefill is attention-only "
+                f"(per-slot SSM state has no page representation)")
+
+
+def paged_prefill_step(cfg: ModelConfig, params, tokens, cache, slot):
+    """One chunked-prefill step writing DIRECTLY into pool pages: extend
+    slot `slot` of a paged cache by the chunk `tokens` ((1, Sc) int32).
+    Returns (last-position logits (1, V), cache).
+
+    This is `prefill_chunk` re-based onto the paged layout — the same
+    scan structure, with `block_extend_paged` scattering the chunk's KV
+    into the slot's physical blocks and attending through the block
+    table, so earlier chunks AND shared-prefix pages claimed from the
+    prefix cache are read without ever materializing a dense cache.
+    `slot` may be traced (one jitted shape per chunk length)."""
+    from repro.models.blocks import block_extend_paged
+    _require_pageable_prefill(cfg)
+    B, Sc = tokens.shape
+    pos0 = cache["cur"][slot]                               # scalar
+    positions = pos0 + jnp.arange(Sc, dtype=jnp.int32)[None]   # (1, Sc)
+    tab_row = cache["block_tab"][slot][None]                # (1, nbt)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    kv_pos = cache["kv_pos"]
+    P, pattern, reps = layer_layout(cfg)
+    new_cache: Dict = dict(cache)
+
+    def make_body(kinds, keys):
+        def body(carry, xs):
+            x, kv_pos = carry
+            p_slice, c_slice = xs
+            new_entries = {}
+            for j, kind in enumerate(kinds):
+                x, entry, kv_pos = block_extend_paged(
+                    p_slice[keys[j]], x, kind, cfg, c_slice[keys[j]],
+                    kv_pos, tab_row, positions)
+                new_entries[keys[j]] = entry
+            return (x, kv_pos), new_entries
+        return body
+
+    if P:
+        body = make_body([LayerKind.DENSE], ["s0"])
+        (x, kv_pos), ys = jax.lax.scan(
+            body, (x, kv_pos),
+            ({"s0": params["prefix"]}, {"s0": cache["prefix"]}))
+        new_cache["prefix"] = ys["s0"]
+    keys = [f"s{j}" for j in range(len(pattern))]
+    body = make_body(list(pattern), keys)
+    p_stack = {f"s{j}": params["blocks"][f"p{j}"] for j in range(len(pattern))}
+    c_stack = {f"s{j}": cache["blocks"][f"p{j}"] for j in range(len(pattern))}
+    (x, kv_pos), ys = jax.lax.scan(body, (x, kv_pos), (p_stack, c_stack))
+    new_cache["blocks"] = {f"p{j}": ys[f"s{j}"] for j in range(len(pattern))}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1])
+    new_cache["kv_pos"] = kv_pos
+    new_cache["cur"] = cache["cur"].at[slot].set(pos0 + Sc)
+    return logits, new_cache
+
+
+def paged_copy_block(cfg: ModelConfig, cache: Dict, src, dst) -> Dict:
+    """Copy physical block `src` → `dst` across every attention pool and
+    the position map — the copy half of copy-on-write.  The caller owns
+    repointing the writing slot's table row at `dst` afterwards."""
+    out = dict(cache)
+    out["blocks"] = dict(cache["blocks"])
+    out["kv_pos"] = cache["kv_pos"].at[dst].set(cache["kv_pos"][src])
+
+    def cp(pool):
+        return pool.at[:, dst].set(pool[:, src])
+
+    for key, kind, _ in _cache_groups(cfg):
+        if not _is_attn_kind(kind):
+            continue
+        core, enc = _split_entry(cfg, _group_entry(cache, key))
+        core = jax.tree.map(cp, core)
+        _set_group_entry(out, key, _joined_entry(cfg, core, enc))
+    return out
+
+
+def paged_gather_blocks(cfg: ModelConfig, cache: Dict, ids) -> Dict:
+    """Block-granular handoff payload: the physical rows named by `ids`
+    ((nbt,) int32, -1 padding) gathered out of every attention pool, plus
+    their kv_pos rows (-1 on padding).  Replaces the dense
+    `paged_cache_take` on the prefill→decode path: the payload is sized
+    by the PAGES the request holds, not max_len."""
+    g = jnp.maximum(ids, 0)
+    out: Dict = {
+        "kv_pos": jnp.where(ids[:, None] < 0, -1, cache["kv_pos"][g]),
+        "blocks": {},
+    }
+
+    def gather(pool):
+        return pool[:, g]                            # (n, nbt, bs, ...)
+
+    for key, kind, _ in _cache_groups(cfg):
+        if not _is_attn_kind(kind):
+            continue                                 # page-native: attn-only
+        core, _enc = _split_entry(cfg, _group_entry(cache, key))
+        _set_group_entry(out, key, jax.tree.map(gather, core))
+    return out
+
+
+def paged_adopt_blocks(cfg: ModelConfig, dst: Dict, payload: Dict, slot,
+                       tab_row, copy_mask, clear_mask, cur) -> Dict:
+    """Install a `paged_gather_blocks` payload into decode cache `dst`:
+    payload block i is scattered into physical block `tab_row[i]` where
+    `copy_mask[i]`; rows with `clear_mask[i]` (freshly allocated growth
+    blocks with no payload) get their kv_pos reset — a reused block
+    inherits stale positions from its previous tenant, and a stale
+    pos <= the reader's cursor would alias as valid history.  Rows under
+    neither mask are SHARED prefix pages already resident on this DP —
+    they are not touched (that is the point of the transfer skip).
+    Masked-out scatter traffic routes to the null block."""
+    ids_clear = jnp.where(clear_mask, jnp.maximum(tab_row, 0), 0)
+    ids_copy = jnp.where(copy_mask, jnp.maximum(tab_row, 0), 0)
+    out = dict(dst)
+    out["blocks"] = dict(dst["blocks"])
+    out["cur"] = dst["cur"].at[slot].set(cur)
+    out["block_tab"] = dst["block_tab"].at[slot].set(tab_row)
+    kv_pos = dst["kv_pos"].at[ids_clear].set(-1)
+    out["kv_pos"] = kv_pos.at[ids_copy].set(payload["kv_pos"])
+
+    def scatter(pool, pay):
+        return pool.at[:, ids_copy].set(pay.astype(pool.dtype))
+
+    for key, kind, _ in _cache_groups(cfg):
+        if not _is_attn_kind(kind):
+            continue
+        core, enc = _split_entry(cfg, _group_entry(dst, key))
+        core = jax.tree.map(scatter, core, _group_entry(payload, key))
+        _set_group_entry(out, key, _joined_entry(cfg, core, enc))
+    return out
+
+
+def paged_clear_rows(cache: Dict, ids) -> Dict:
+    """Reset kv_pos for the pool rows named by `ids` ((m,) int32, -1
+    padding routes to the null block, harmlessly).  Freshly allocated
+    blocks MUST be cleared before a slot attends through them: the rows
+    keep stale positions from their previous tenant, and any stale
+    pos <= the reader's cursor would alias as valid history."""
+    g = jnp.maximum(ids, 0)
+    out = dict(cache)
+    out["kv_pos"] = cache["kv_pos"].at[g].set(-1)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Encoder (whisper)
 # ---------------------------------------------------------------------------

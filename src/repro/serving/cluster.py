@@ -57,7 +57,9 @@ def build_prefill_scheduler(state: GlobalState, scfg: ServingConfig,
     if scheduler == "sbs":
         cache = None
         if scfg.cache_aware:
-            cache = PrefixCacheIndex([d.dp_id for d in state.prefill_dps])
+            cache = PrefixCacheIndex(
+                [d.dp_id for d in state.prefill_dps],
+                block=scfg.block_size or 16)
         return StaggeredBatchScheduler(
             state, n_limit=scfg.n_limit, cache_aware=scfg.cache_aware,
             prefix_cache=cache,
@@ -70,19 +72,35 @@ def build_prefill_scheduler(state: GlobalState, scfg: ServingConfig,
 
 def build_decode_scheduler(state: GlobalState, scfg: ServingConfig,
                            scheduler: str, policy: str = "round_robin",
-                           watchdog_multiplier: float = 0.0
+                           watchdog_multiplier: float = 0.0,
+                           cache_aware: Optional[bool] = None
                            ) -> DecodeScheduler:
     """Decode plane scheduler for any driver (sim or real):
     'sbs' = IQR-lex batched placement, 'sbs-la' = Load-Aware Global
-    Allocation, 'immediate' = per-handoff placement baseline."""
+    Allocation, 'immediate' = per-handoff placement baseline.
+
+    With `scfg.cache_aware` (overridable via the `cache_aware` arg, which
+    the real server sets when prefix caching is on), 'sbs-la' and
+    'immediate' get cache-aware placement: a per-decode-DP prefix index
+    steers each hand-off to the DP already holding the longest prefix of
+    its prompt (the real plane's per-DP page binders then resolve that
+    prefix to live pages)."""
     if scheduler not in ("sbs", "sbs-la", "immediate"):
         raise ValueError(scheduler)
     mode = "immediate" if scheduler == "immediate" else "sbs"
     alloc = "load_aware" if scheduler == "sbs-la" else "lex"
+    if cache_aware is None:
+        cache_aware = scfg.cache_aware
+    cache = None
+    if cache_aware and scheduler in ("sbs-la", "immediate"):
+        cache = PrefixCacheIndex(
+            [d.dp_id for d in state.decode_dps],
+            block=scfg.block_size or 16)
     return DecodeScheduler(
         state, mode=mode, policy=policy, iqr_k=scfg.iqr_k,
         window=scfg.l_net * 10 + 0.02, alloc=alloc,
-        watchdog_multiplier=watchdog_multiplier)
+        watchdog_multiplier=watchdog_multiplier,
+        prefix_cache=cache)
 
 
 def build_prefill_instances(state: GlobalState, scfg: ServingConfig,

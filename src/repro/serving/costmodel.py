@@ -79,14 +79,23 @@ class CostModel:
         return n_moe * 2 * k * self.cfg.d_model * 2   # dispatch + combine, bf16
 
     # ------------------------------------------------------------------
-    def prefill_dp_time(self, tokens: int, ctx: Optional[int] = None) -> float:
-        """One DP unit processing `tokens` prompt tokens."""
+    def prefill_flops(self, tokens: int, ctx: Optional[int] = None) -> float:
+        """FLOPs to prefill `tokens` prompt tokens at mean context `ctx`.
+        Also the unit in which prefix-cache savings are priced: a cached
+        prefix of T tokens skips exactly prefill_flops(T)."""
         if tokens <= 0:
             return 0.0
         ctx = ctx or self.avg_ctx
         flops = 2.0 * self._active_params * tokens
         # attention ~ 2·2·L·d_head·H·ctx per token (rough quadratic term)
         flops += 4.0 * self.cfg.num_layers * self.cfg.d_model * ctx * tokens
+        return flops
+
+    def prefill_dp_time(self, tokens: int, ctx: Optional[int] = None) -> float:
+        """One DP unit processing `tokens` prompt tokens."""
+        if tokens <= 0:
+            return 0.0
+        flops = self.prefill_flops(tokens, ctx)
         chips = self.chips_per_prefill_dp
         t_comp = flops / (chips * PEAK_FLOPS * self.mfu)
         t_mem = (self.active_param_bytes / 8.0) / (chips * HBM_BW * self.mbu)

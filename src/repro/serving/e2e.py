@@ -34,20 +34,28 @@ class E2EReport:
     goodput: float                  # fraction finishing within slo_e2e
     prefill_util: float
     throughput: float = 0.0        # decode tokens / s over the run
+    prefix_hit_rate: float = 0.0   # cached prefix tokens / prompt tokens
+    prefill_flops_saved: float = 0.0   # FLOPs skipped via prefix reuse
 
     def row(self) -> str:
-        return (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
-                f"p99={self.ttft_p99*1000:.0f}ms "
-                f"tpot={self.tpot_mean*1000:.1f}ms "
-                f"e2e={self.e2e_mean:.2f}s goodput={self.goodput*100:.1f}% "
-                f"util={self.prefill_util*100:.1f}% "
-                f"thr={self.throughput:.0f} tok/s")
+        out = (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
+               f"p99={self.ttft_p99*1000:.0f}ms "
+               f"tpot={self.tpot_mean*1000:.1f}ms "
+               f"e2e={self.e2e_mean:.2f}s goodput={self.goodput*100:.1f}% "
+               f"util={self.prefill_util*100:.1f}% "
+               f"thr={self.throughput:.0f} tok/s")
+        if self.prefix_hit_rate:
+            out += (f" hit={self.prefix_hit_rate*100:.1f}% "
+                    f"saved={self.prefill_flops_saved:.2e}FLOPs")
+        return out
 
     def json_row(self) -> dict:
         return {"n_finished": self.n_finished,
                 "ttft_p50": self.ttft_p50, "ttft_p99": self.ttft_p99,
                 "ttft_mean": self.ttft_mean, "tpot_mean": self.tpot_mean,
-                "throughput": self.throughput, "goodput": self.goodput}
+                "throughput": self.throughput, "goodput": self.goodput,
+                "prefix_hit_rate": self.prefix_hit_rate,
+                "prefill_flops_saved": self.prefill_flops_saved}
 
 
 class PDClusterSim:
@@ -97,10 +105,19 @@ class PDClusterSim:
                  for r in done if r.first_token_time is not None]
         e2e = [r.finish_time - r.arrival_time for r in done]
         good = sum(1 for x in e2e if x <= slo_e2e) / max(len(requests), 1)
+        # prefix-reuse accounting: the sim prices savings with the SAME
+        # cost model the dispatcher uses, so sim and real planes share one
+        # reuse model (the real plane reports engine-truth counters via
+        # RealSBSServer.prefix_stats instead)
+        cache = getattr(self.psched, "cache", None)
+        hit_rate = cache.hit_rate if cache is not None else 0.0
+        saved = (self.cost.prefill_flops(cache.hit_tokens)
+                 if cache is not None and cache.hit_tokens else 0.0)
         return E2EReport(
             n_finished=len(done),
             ttft_mean=mean(ttfts), ttft_p50=percentile(ttfts, 50),
             ttft_p99=percentile(ttfts, 99),
             tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
             prefill_util=self.runtime.prefill_util,
-            throughput=self.runtime.tokens_generated / max(end, 1e-9))
+            throughput=self.runtime.tokens_generated / max(end, 1e-9),
+            prefix_hit_rate=hit_rate, prefill_flops_saved=saved)

@@ -8,12 +8,26 @@ thread.  The runtime runs in realtime mode (wall clock): `start_pass` /
 `start_step` return the ASYNC sentinel, and the worker posts the
 matching `pass_end` / `step_end` completion to the runtime's event loop.
 
-Prefill is TRUE chunked prefill: each granted (request, tokens) slice
-extends the request's batch-1 KV cache via `prefill_chunk`; when the
-prompt completes, the first output token (argmax of the last-chunk
-logits) plus the finished cache are published on the `KVHandoffBus` —
-the paper's P/D KV-cache transfer, priced by `transfer_time` on the
-runtime heap and physically realised at join time.
+Prefill is TRUE chunked prefill with two cache backends:
+
+  dense (default)        each granted (request, tokens) slice extends the
+      request's private batch-1 KV cache via `prefill_chunk`; completion
+      publishes the whole cache on the `KVHandoffBus`.
+  page-native (opt-in)   chunks write DIRECTLY into `BlockPool` pages via
+      `paged_prefill_step` — no batch-1 staging cache exists.  With
+      `share_prefix`, a `PagePrefixBinder` resolves each new prompt's
+      longest cached prefix to live pages at enqueue time, so those
+      chunks are never computed (an exact full-prompt hit skips prefill
+      entirely and replays the stored first token).  Completion gathers
+      only the pages the request holds (`paged_gather_blocks`) into a
+      `PageHandoff` — the handoff-realization copy of the dense path is
+      gone, and the payload is sized by the prompt, not max_len.
+
+When the prompt completes, the first output token (argmax of the
+last-chunk logits) plus the cache/handoff are published on the
+`KVHandoffBus` — the paper's P/D KV-cache transfer, priced by
+`transfer_time` on the runtime heap and physically realised at join
+time.
 
 Decode is CONTINUOUS BATCHED decode with two cache backends behind one
 engine:
@@ -27,12 +41,19 @@ engine:
       concurrent short requests than max_len-padded slots would.
 
 Handed-off requests JOIN by `cache_join`/`paged_cache_join` into a free
-slot, every step runs one batched `decode_step`/`paged_decode_step` per
-occupied DP behind the instance sync barrier, and finished requests
-LEAVE by freeing their slot (paged: also dropping their table row and
-returning their blocks).  All scheduler state mutation happens on the
-runtime thread (finish_pass/finish_step); worker threads only execute
-JAX computations on snapshots.
+slot (a `PageHandoff` joins by `paged_adopt_blocks`: shared prefix pages
+already resident on the DP are pointed at, not copied), every step runs
+one batched `decode_step`/`paged_decode_step` per occupied DP behind the
+instance sync barrier, and finished requests LEAVE by freeing their slot
+(paged: also dropping their table row and returning their blocks).  A
+decode DP with `share_prefix` publishes each joined prompt's pages into
+its own binder and COPY-ON-WRITES the partial tail block EAGERLY at join
+— the request's very first decode write would land in the now-shared
+block, so the divergence point is known and the copy happens while no
+step is in flight.  All scheduler state mutation happens on the runtime
+thread (enqueue/finish_pass/start_step/finish_step); worker threads only
+execute JAX computations on snapshots — device caches are never mutated
+while a pass/step is in flight.
 """
 from __future__ import annotations
 
@@ -46,14 +67,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
-from repro.core.types import Request, RequestPhase
+from repro.core.types import DispatchCommand, Request, RequestPhase
 from repro.models.model import (
-    cache_join, cache_take, decode_step, init_cache, init_paged_cache,
-    paged_cache_clear_slot, paged_cache_join, paged_cache_take, paged_layout,
-    prefill_chunk, paged_decode_step,
+    _require_pageable_prefill, cache_join, cache_take, decode_step,
+    init_cache, init_paged_cache, paged_adopt_blocks, paged_cache_clear_slot,
+    paged_cache_join, paged_cache_take, paged_clear_rows, paged_copy_block,
+    paged_decode_step, paged_gather_blocks, paged_layout, paged_prefill_step,
+    prefill_chunk,
 )
 from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
 from repro.serving.kv_pool import BlockPool, pad_block_table
+from repro.serving.page_share import PagePrefixBinder
 from repro.serving.plane import ASYNC, PassResult, StartResult
 
 
@@ -83,6 +107,8 @@ class EngineSpec:
     block_size: int = 0         # paged KV block size (0 = padded slots)
     decode_slots: int = 0       # paged batch rows per DP (0 = 2×max_batch)
     pool_blocks: int = 0        # physical blocks per DP (0 = equal-memory)
+    prefill_slots: int = 0      # page-native prefill rows (0 = auto)
+    prefill_pool_blocks: int = 0  # page-native prefill pool (0 = auto)
 
     def __post_init__(self):
         cfg = self.cfg
@@ -98,6 +124,19 @@ class EngineSpec:
             self.jit_paged_join = jax.jit(
                 lambda d, s, slot, tab: paged_cache_join(cfg, d, s, slot,
                                                          tab))
+            # page-native prefill + block-granular handoff (one jitted
+            # shape each: tables/masks are padded to nbt width, slot and
+            # block ids are traced scalars)
+            self.jit_paged_prefill = jax.jit(
+                lambda p, t, c, slot: paged_prefill_step(cfg, p, t, c, slot))
+            self.jit_gather_blocks = jax.jit(
+                lambda c, ids: paged_gather_blocks(cfg, c, ids))
+            self.jit_adopt_blocks = jax.jit(
+                lambda d, pay, slot, tab, cm, km, cur: paged_adopt_blocks(
+                    cfg, d, pay, slot, tab, cm, km, cur))
+            self.jit_copy_block = jax.jit(
+                lambda c, src, dst: paged_copy_block(cfg, c, src, dst))
+            self.jit_clear_rows = jax.jit(paged_clear_rows)
 
     @property
     def paged(self) -> bool:
@@ -116,6 +155,33 @@ class EngineSpec:
             return self.pool_blocks
         return self.max_batch * self.max_len // self.block_size + 1
 
+    @property
+    def prefix_sharable(self) -> bool:
+        """Page sharing needs every cached layer to live in pool pages —
+        attention-only decoder-only configs (SSM/encoder state has no
+        page representation)."""
+        if not self.paged:
+            return False
+        try:
+            _require_pageable_prefill(self.cfg)
+        except ValueError:
+            return False
+        return True
+
+    @property
+    def paged_prefill_slots(self) -> int:
+        """Concurrent in-flight prompts per page-native prefill engine."""
+        return self.prefill_slots or max(8, 2 * self.max_batch)
+
+    @property
+    def paged_prefill_blocks(self) -> int:
+        """Prefill-pool size: 2× the slot working set, so completed pages
+        can stay resident in the prefix cache while fresh prompts stage."""
+        if self.prefill_pool_blocks:
+            return self.prefill_pool_blocks
+        per_slot = self.max_len // self.block_size
+        return 2 * self.paged_prefill_slots * per_slot + 1
+
     def request_cache(self) -> Dict:
         return init_cache(self.cfg, 1, self.max_len)
 
@@ -125,6 +191,11 @@ class EngineSpec:
     def paged_cache(self) -> Dict:
         return init_paged_cache(self.cfg, self.paged_slots,
                                 self.paged_pool_blocks, self.max_len,
+                                self.block_size)
+
+    def prefill_paged_cache(self) -> Dict:
+        return init_paged_cache(self.cfg, self.paged_prefill_slots,
+                                self.paged_prefill_blocks, self.max_len,
                                 self.block_size)
 
     def target_len(self, req: Request) -> int:
@@ -140,10 +211,22 @@ class EngineSpec:
 
 
 @dataclasses.dataclass
+class PageHandoff:
+    """Block-granular prefill→decode KV payload (`paged_gather_blocks`
+    output, nbt-padded): only the pages the prompt actually occupies
+    travel, not a max_len dense cache.  `n_tokens` is the prompt length
+    the payload covers (payload row i holds tokens [i·bs, (i+1)·bs))."""
+    payload: Dict
+    n_tokens: int
+
+
+@dataclasses.dataclass
 class GenState:
-    """Per-request generation context carried across the P/D handoff."""
+    """Per-request generation context carried across the P/D handoff.
+    `cache` is a dense batch-1 cache (dense prefill / drain re-park) or a
+    `PageHandoff` (page-native prefill); None while resident."""
     rid: int
-    cache: Optional[Dict]       # parked KV cache (None while resident)
+    cache: Optional[Any]        # parked KV payload (None while resident)
     tokens: List[int]
 
 
@@ -159,7 +242,7 @@ class KVHandoffBus:
     def __init__(self):
         self._gens: Dict[int, GenState] = {}
 
-    def publish(self, rid: int, cache: Dict, first_token: int) -> GenState:
+    def publish(self, rid: int, cache: Any, first_token: int) -> GenState:
         gen = GenState(rid=rid, cache=cache, tokens=[first_token])
         self._gens[rid] = gen
         return gen
@@ -239,35 +322,194 @@ class _PrefillCtx:
         self.first_token: Optional[int] = None
 
 
+class _PagedPrefillCtx:
+    """Model-side state of one PAGE-NATIVE prefill: a row of the
+    engine-shared paged cache plus the request's block table.  `slot` is
+    None until the engine stages the request (allocates its fresh blocks
+    and installs its table row); a full-prefix cache hit never stages —
+    `consumed` starts at `input_len` and the stored first token replays."""
+
+    def __init__(self, table: List[int], claimed: int,
+                 first_token: Optional[int] = None):
+        self.slot: Optional[int] = None
+        self.table = table          # physical blocks (claimed prefix first)
+        self.claimed = claimed      # prefix tokens resolved from cache
+        self.consumed = claimed     # prompt tokens whose KV is in pages
+        self.first_token = first_token
+
+
 class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
     """Chunked-prefill engine: scheduler-side queueing/batch-forming and
     EndForward bookkeeping are inherited from the simulated instance —
     only the pass execution differs (jitted `prefill_chunk` on the worker
-    thread instead of a cost-model duration)."""
+    thread instead of a cost-model duration).
+
+    With `page_native=True` chunks write straight into `BlockPool` pages
+    (`paged_prefill_step`), and `share_prefix=True` adds a
+    `PagePrefixBinder`: at enqueue time a new prompt's longest cached
+    prefix is CLAIMED (refcounted pages, no copy) so its chunks are never
+    computed.  The claim must equal the hit the scheduler credited — both
+    sides resolve against the same binder in the same runtime-thread tick
+    (see `page_share.EngineBackedPrefixIndex`), so a mismatch is a wiring
+    bug and raises."""
 
     def __init__(self, instance_id: int, dp_ids: Sequence[int], chunk: int,
-                 spec: EngineSpec, bus: KVHandoffBus):
+                 spec: EngineSpec, bus: KVHandoffBus,
+                 page_native: bool = False, share_prefix: bool = False,
+                 cache_budget_tokens: Optional[int] = None):
         super().__init__(instance_id, dp_ids, chunk, cost=None)
         _WorkerOwner.__init__(self, f"prefill-{instance_id}")
         self.spec = spec
         self.bus = bus
         self._post = None
         self._ctx: Dict[int, _PrefillCtx] = {}
+        self.page_native = bool(page_native)
+        self.binder: Optional[PagePrefixBinder] = None
+        if self.page_native:
+            if not spec.prefix_sharable:
+                raise ValueError(
+                    "page_native prefill needs block_size > 0 and an "
+                    "attention-only decoder-only config")
+            self.pool = BlockPool(spec.paged_prefill_blocks, spec.block_size)
+            self.cache = spec.prefill_paged_cache()
+            if share_prefix:
+                self.binder = PagePrefixBinder(
+                    self.pool, budget_tokens=cache_budget_tokens)
+            self._free_slots: List[int] = list(
+                range(spec.paged_prefill_slots))
+            self._pctx: Dict[int, _PagedPrefillCtx] = {}
+        elif share_prefix:
+            raise ValueError("share_prefix requires page_native=True")
+        # page-native stats (read after the run; only the worker writes
+        # chunks_run, only the runtime thread writes the claim counters)
+        self.chunks_run = 0
+        self.full_hits = 0
 
     # -- lifecycle -------------------------------------------------------
     def bind_loop(self, loop) -> None:
         self._post = loop.post
 
     # -- EnginePlane -----------------------------------------------------
+    def enqueue(self, cmd: DispatchCommand, now: float) -> None:
+        if self.page_native:
+            for dp_id, lst in cmd.assignments.items():
+                for req, tok in lst:
+                    if req.rid not in self._pctx:
+                        self._claim_prefix(req, tok)
+        super().enqueue(cmd, now)
+
+    def _claim_prefix(self, req: Request, tok: int) -> None:
+        """First sight of a request: resolve its cached prefix to pages.
+        The scheduler already credited `expected` hit tokens (it granted
+        `tok` now and debited `remaining_prefill` by grant + hit), so the
+        engine-side claim must match exactly — the claimed chunks will
+        never be granted again."""
+        expected = req.input_len - req.remaining_prefill - tok
+        toks = (req.tokens or ())[:req.input_len]
+        if self.binder is not None and toks:
+            claim, blocks, first = self.binder.claim(toks)
+            self.binder.record(claim, req.input_len)
+        else:
+            claim, blocks, first = 0, [], None
+        if claim != expected:
+            raise RuntimeError(
+                f"request {req.rid}: scheduler credited a {expected}-token "
+                f"prefix hit but the engine binder resolved {claim} — "
+                f"cache-aware dispatch on the real plane must match "
+                f"through EngineBackedPrefixIndex")
+        if claim >= req.input_len:
+            self.full_hits += 1
+        self._pctx[req.rid] = _PagedPrefillCtx(list(blocks), claim, first)
+
+    def _stage(self, req: Request, ctx: _PagedPrefillCtx) -> bool:
+        """Give an unstaged request a cache row + its fresh blocks, and
+        install its table/cursor device-side.  Runs on the runtime thread
+        with no pass in flight, so the cache mutation cannot race the
+        worker.  Returns False (leaving ctx untouched) under slot/page
+        exhaustion — the caller requeues the request's chunks."""
+        if not self._free_slots:
+            return False
+        need = self.pool.blocks_for(req.input_len) - len(ctx.table)
+        if need > self.pool.free_count and self.binder is not None:
+            self.binder.ensure_free(need)
+        if need > self.pool.free_count:
+            return False
+        fresh = self.pool.alloc(need)
+        ctx.table = ctx.table + fresh
+        ctx.slot = self._free_slots.pop()
+        nbt = self.spec.nbt
+        if fresh:
+            # reused pages keep their previous tenant's kv_pos; any stale
+            # pos <= the reader's cursor would alias as valid history
+            ids = jnp.asarray(pad_block_table(fresh, nbt), jnp.int32)
+            self.cache = self.spec.jit_clear_rows(self.cache, ids)
+        tab = jnp.asarray(pad_block_table(ctx.table, nbt), jnp.int32)
+        self.cache = dict(self.cache)
+        self.cache["block_tab"] = self.cache["block_tab"].at[ctx.slot].set(tab)
+        self.cache["cur"] = self.cache["cur"].at[ctx.slot].set(ctx.claimed)
+        return True
+
     def start_pass(self, now: float) -> StartResult:
         self._raise_worker_error()
+        if self.page_native and not self.busy:
+            # stage before batch-forming, in queue order, so _begin_pass
+            # only hands the worker requests with a live cache row
+            staged = set()
+            for d in self.dp_ids:
+                for req, _tok in self.queues[d]:
+                    ctx = self._pctx.get(req.rid)
+                    if (ctx is None or ctx.slot is not None
+                            or ctx.consumed >= req.input_len
+                            or req.rid in staged):
+                        continue
+                    if not self._stage(req, ctx):
+                        break       # exhausted: later arrivals wait too
+                    staged.add(req.rid)
         batch = self._begin_pass(now)
         if batch is None:
             return None
+        if self.page_native:
+            batch = self._strip_unstaged(batch)
+            if batch is None:
+                return None
         post = self._post        # bound per run: an abandoned job cannot
         self._worker.submit(     # post into a later run's loop
             lambda: self._exec_pass(batch, post))
         return ASYNC
+
+    def _strip_unstaged(self, batch: Dict[int, List[Tuple[Request, int]]]
+                        ) -> Optional[Dict[int, List[Tuple[Request, int]]]]:
+        """Drop batch items whose request has no cache row (page/slot
+        exhaustion) and requeue them at the FRONT of their queue; roll
+        the pass back entirely if nothing runnable remains.  Full-hit
+        requests (consumed == input_len, slot None) always stay — their
+        zero-token markers complete without touching the device."""
+        kept: Dict[int, List[Tuple[Request, int]]] = {}
+        dropped = 0
+        for d, taken in batch.items():
+            keep: List[Tuple[Request, int]] = []
+            back: List[Tuple[Request, int]] = []
+            for req, tok in taken:
+                ctx = self._pctx[req.rid]
+                if ctx.slot is None and ctx.consumed < req.input_len:
+                    back.append((req, tok))
+                else:
+                    keep.append((req, tok))
+            if keep:
+                kept[d] = keep
+            for item in reversed(back):
+                self.queues[d].appendleft(item)
+            dropped += len(back)
+        if not kept:
+            # nothing runnable: undo _begin_pass bookkeeping and idle
+            self._current = None
+            self.busy = False
+            self.passes -= 1
+            self.capacity_offered -= len(self.dp_ids) * self.chunk
+            return None
+        if dropped:
+            self._current = kept
+        return kept
 
     def _exec_pass(self, batch: Dict[int, List[Tuple[Request, int]]],
                    post) -> None:
@@ -281,6 +523,9 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
         post("pass_end", self)
 
     def _run_chunk(self, req: Request, tok: int) -> None:
+        if self.page_native:
+            self._run_chunk_paged(req, tok)
+            return
         ctx = self._ctx.get(req.rid)
         if ctx is None:
             ctx = self._ctx[req.rid] = _PrefillCtx(self.spec)
@@ -293,10 +538,29 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
             if ctx.consumed >= req.input_len and ctx.first_token is None:
                 ctx.first_token = int(jnp.argmax(logits[0]))
 
+    def _run_chunk_paged(self, req: Request, tok: int) -> None:
+        # worker thread: extend the request's cache row in place; the
+        # engine-shared cache is only rebound here and in the (mutually
+        # exclusive) staging path on the runtime thread
+        ctx = self._pctx[req.rid]
+        ids = (req.tokens or ())[ctx.consumed: ctx.consumed + tok]
+        if not ids:
+            return
+        arr = jnp.asarray([ids], jnp.int32)
+        logits, self.cache = self.spec.jit_paged_prefill(
+            self.spec.params, arr, self.cache, ctx.slot)
+        self.chunks_run += 1
+        ctx.consumed += len(ids)
+        if ctx.consumed >= req.input_len and ctx.first_token is None:
+            ctx.first_token = int(jnp.argmax(logits[0]))
+
     def finish_pass(self, now: float) -> PassResult:
         self._raise_worker_error()
         res = super().finish_pass(now)
         for req in res.completed:
+            if self.page_native:
+                self._complete_paged(req)
+                continue
             ctx = self._ctx.pop(req.rid, None)
             if ctx is None or ctx.first_token is None:
                 raise RuntimeError(
@@ -307,6 +571,35 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
             self.bus.publish(req.rid, ctx.cache, ctx.first_token)
             req.generated = 1
         return res
+
+    def _complete_paged(self, req: Request) -> None:
+        """Page-native completion: gather ONLY the prompt's pages as the
+        handoff payload, publish the pages into the prefix cache, then
+        release the engine's row and references.  Ordering matters: the
+        gather snapshots page contents before any free; `binder.insert`
+        increfs newly bound pages before the engine's own references are
+        dropped, so published pages never transit refcount 0."""
+        ctx = self._pctx.pop(req.rid, None)
+        if ctx is None or ctx.first_token is None:
+            raise RuntimeError(
+                f"request {req.rid} completed prefill without model "
+                f"state (tokens shorter than input_len?)")
+        ids = jnp.asarray(pad_block_table(ctx.table, self.spec.nbt),
+                          jnp.int32)
+        payload = self.spec.jit_gather_blocks(self.cache, ids)
+        self.bus.publish(req.rid, PageHandoff(payload, req.input_len),
+                         ctx.first_token)
+        req.generated = 1
+        if self.binder is not None and req.tokens:
+            # a prompt's pages are frozen from here on (prefill never
+            # writes past input_len), so the partial tail is publishable
+            # together with its first-token payload
+            self.binder.insert(req.tokens[:req.input_len], ctx.table,
+                               first_token=ctx.first_token)
+        if ctx.slot is not None:
+            self.cache = paged_cache_clear_slot(self.cache, ctx.slot)
+            self._free_slots.append(ctx.slot)
+        self.pool.free(ctx.table)
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +627,7 @@ class _DPDecodeState:
         return any(r is not None for r in self.slots)
 
     # padded plane: a free slot IS the admission token
-    def can_admit(self, need_tokens: int) -> bool:
+    def can_admit(self, need_tokens: int, extra_blocks: int = 0) -> bool:
         return self.free_slot() is not None
 
 
@@ -343,20 +636,31 @@ class _DPPagedState(_DPDecodeState):
     rows over a shared `BlockPool`.  Admission is by free-BLOCK count —
     a request's lifetime blocks are reserved at join (so a resident
     request can never strand mid-generation waiting for a page) and
-    returned at leave/drain."""
+    returned at leave/drain.
 
-    def __init__(self, spec: EngineSpec):
+    With `share_prefix`, the unit also owns a `PagePrefixBinder`: joined
+    prompts publish their pages, and later prompts with a matching prefix
+    point at the resident pages instead of re-copying their handoff
+    payload rows.  Pool pressure evicts cache entries before refusing an
+    admission (`binder.ensure_free`)."""
+
+    def __init__(self, spec: EngineSpec, share_prefix: bool = False):
         super().__init__(spec, n_slots=spec.paged_slots)
         self.pool = BlockPool(spec.paged_pool_blocks, spec.block_size)
         self.held: Dict[int, List[int]] = {}       # rid -> block ids
+        self.binder: Optional[PagePrefixBinder] = (
+            PagePrefixBinder(self.pool) if share_prefix else None)
 
-    def can_admit(self, need_tokens: int) -> bool:
+    def can_admit(self, need_tokens: int, extra_blocks: int = 0) -> bool:
         need = self.pool.blocks_for(need_tokens)
         if need > self.pool.num_blocks - 1:
             raise ValueError(
                 f"request needs {need} blocks, pool holds only "
                 f"{self.pool.num_blocks - 1} — raise max_len/pool_blocks")
-        return self.free_slot() is not None and need <= self.pool.free_count
+        if self.binder is not None:
+            self.binder.ensure_free(need + extra_blocks)
+        return (self.free_slot() is not None
+                and need + extra_blocks <= self.pool.free_count)
 
 
 class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
@@ -366,21 +670,30 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
     this class adds the physical batch caches and the jitted step."""
 
     def __init__(self, instance_id: int, dp_ids: Sequence[int],
-                 spec: EngineSpec, bus: KVHandoffBus):
+                 spec: EngineSpec, bus: KVHandoffBus,
+                 share_prefix: bool = False):
         super().__init__(instance_id, dp_ids, cost=None)
         _WorkerOwner.__init__(self, f"decode-{instance_id}")
         self.spec = spec
         self.bus = bus
         self._post = None
-        state_cls = _DPPagedState if spec.paged else _DPDecodeState
-        self._dp: Dict[int, _DPDecodeState] = {
-            d: state_cls(spec) for d in dp_ids}
+        if share_prefix and not spec.prefix_sharable:
+            raise ValueError(
+                "share_prefix requires a paged attention-only config")
+        if spec.paged:
+            self._dp: Dict[int, _DPDecodeState] = {
+                d: _DPPagedState(spec, share_prefix=share_prefix)
+                for d in dp_ids}
+        else:
+            self._dp = {d: _DPDecodeState(spec) for d in dp_ids}
         self._pending: List[Tuple[int, Request]] = []
         self._slot_of: Dict[int, Tuple[int, int]] = {}   # rid -> (dp, slot)
         self._participants: Dict[int, List[Tuple[Request, int]]] = {}
         self._result: Optional[Dict[int, Tuple[Dict, List[int]]]] = None
         self._join_finished: List[Request] = []
         self.peak_resident = 0      # max concurrent resident requests
+        self.cow_copies = 0         # eager tail copy-on-writes at join
+        self.blocks_shared = 0      # payload rows skipped via shared pages
 
     # -- lifecycle -------------------------------------------------------
     def bind_loop(self, loop) -> None:
@@ -437,17 +750,24 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
                 continue
             # padded: admission token = a free slot; paged: a free slot
             # AND the request's lifetime blocks (reserved up front so a
-            # resident request never stalls mid-generation on a page)
-            if not st.can_admit(self.spec.lifetime_tokens(req)):
+            # resident request never stalls mid-generation on a page;
+            # share_prefix holds one block of slack for the eager tail
+            # copy-on-write in _join_pages)
+            life = self.spec.lifetime_tokens(req)
+            use_binder = (self.spec.paged and st.binder is not None
+                          and st.pool.blocks_for(life)
+                          < st.pool.num_blocks - 1)
+            if not st.can_admit(life, extra_blocks=1 if use_binder else 0):
                 still.append((dp_id, req))   # retry after this step
                 continue
             slot = st.free_slot()
             if st.cache is None:
                 st.cache = (self.spec.paged_cache() if self.spec.paged
                             else self.spec.batch_cache())
-            if self.spec.paged:
-                ids = st.pool.alloc(st.pool.blocks_for(
-                    self.spec.lifetime_tokens(req)))
+            if self.spec.paged and isinstance(gen.cache, PageHandoff):
+                self._join_pages(st, gen, req, slot, use_binder)
+            elif self.spec.paged:
+                ids = st.pool.alloc(st.pool.blocks_for(life))
                 st.held[req.rid] = ids
                 tab = jnp.asarray(pad_block_table(ids, self.spec.nbt),
                                   jnp.int32)
@@ -462,6 +782,54 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
             self.running[dp_id].append(req)
             self.peak_resident = max(self.peak_resident, len(self._slot_of))
         self._pending = still
+
+    def _join_pages(self, st: "_DPPagedState", gen: GenState, req: Request,
+                    slot: int, use_binder: bool) -> None:
+        """Adopt a `PageHandoff` into this DP: prefix blocks already
+        resident (binder claim) are POINTED AT, the rest of the payload
+        is copied into fresh blocks, growth blocks get their stale kv_pos
+        cleared.  Then the prompt's pages are published into the DP's own
+        prefix cache; binding makes the partial tail block shared, and
+        the request's first decode write lands exactly there — so the
+        copy-on-write divergence is handled EAGERLY, now, while no step
+        is in flight, leaving the cached tail frozen at input_len."""
+        ph: PageHandoff = gen.cache
+        bs = self.spec.block_size
+        toks = (req.tokens or ())[:req.input_len]
+        n_all = st.pool.blocks_for(self.spec.lifetime_tokens(req))
+        n_payload = st.pool.blocks_for(req.input_len)
+        if use_binder and toks:
+            claim, shared, _first = st.binder.claim(toks)
+            st.binder.record(claim, req.input_len)
+        else:
+            claim, shared = 0, []
+        n_shared = len(shared)
+        self.blocks_shared += n_shared
+        table = list(shared) + st.pool.alloc(n_all - n_shared)
+        st.held[req.rid] = table
+        idx = jnp.arange(self.spec.nbt)
+        copy_mask = (idx >= n_shared) & (idx < n_payload)
+        clear_mask = (idx >= n_payload) & (idx < n_all)
+        tab = jnp.asarray(pad_block_table(table, self.spec.nbt), jnp.int32)
+        st.cache = self.spec.jit_adopt_blocks(
+            st.cache, ph.payload, slot, tab, copy_mask, clear_mask,
+            req.input_len)
+        if not use_binder or not toks:
+            return
+        st.binder.insert(toks, table[:n_payload],
+                         first_token=gen.tokens[0])
+        lw = req.input_len // bs
+        if req.input_len % bs and st.pool.is_shared(table[lw]):
+            # eager COW: the admission slack block becomes the private
+            # tail; the cached copy stays frozen for future exact hits
+            new = st.pool.alloc(1)[0]
+            old = table[lw]
+            st.cache = self.spec.jit_copy_block(st.cache, old, new)
+            st.cache["block_tab"] = (
+                st.cache["block_tab"].at[slot, lw].set(new))
+            table[lw] = new
+            st.pool.free([old])
+            self.cow_copies += 1
 
     def start_step(self, dp_states, now: Optional[float] = None
                    ) -> StartResult:

@@ -35,6 +35,7 @@ from repro.core.types import Request
 from repro.serving.cluster import (
     build_decode_scheduler, build_prefill_scheduler, build_state,
 )
+from repro.serving.page_share import EngineBackedPrefixIndex
 from repro.serving.real_engine import (
     EngineSpec, KVHandoffBus, RealDecodeEngine, RealPrefillEngine,
 )
@@ -70,7 +71,8 @@ class RealSBSServer:
                  scheduler: str = "sbs", max_len: int = 256,
                  max_new: int = 8,
                  watchdog_multiplier: float = 0.0,
-                 spec: Optional[EngineSpec] = None):
+                 spec: Optional[EngineSpec] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         scfg = serving_cfg or _default_serving_config()
         self.scfg = scfg
@@ -84,7 +86,8 @@ class RealSBSServer:
             raise ValueError(scheduler)
         self.dsched = build_decode_scheduler(
             self.state, scfg, scheduler,
-            watchdog_multiplier=watchdog_multiplier)
+            watchdog_multiplier=watchdog_multiplier,
+            cache_aware=True if prefix_cache else None)
         # a spec may be shared across server instances (e.g. one per
         # scheduler variant over the same model) so each jitted shape
         # compiles once per process instead of once per server.  With
@@ -97,16 +100,41 @@ class RealSBSServer:
             block_size=scfg.block_size,
             decode_slots=(scfg.resolved_decode_slots
                           if scfg.block_size else 0))
+        # prefix_cache turns on block-granular prefix reuse end to end:
+        # page-native prefill engines with shared refcounted pages (a
+        # cached prefix's chunks are never computed), PageHandoff
+        # transfers, per-decode-DP binders with eager COW, and cache-
+        # aware placement on BOTH schedulers.  Prefill-side claiming
+        # needs the credit-granting PBAA path, so the `immediate`
+        # baseline shares pages only on the decode side.
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and not self.spec.prefix_sharable:
+            raise ValueError(
+                "prefix_cache=True needs a paged deployment "
+                "(ServingConfig.block_size > 0) and an attention-only "
+                "decoder-only model config")
+        share_prefill = self.prefix_cache and scheduler in ("sbs", "sbs-la")
         self.bus = KVHandoffBus()
         self.engines = [
             RealPrefillEngine(
                 i, [d.dp_id for d in self.state.prefill_dps_of(i)],
-                scfg.chunk_size, self.spec, self.bus)
+                scfg.chunk_size, self.spec, self.bus,
+                page_native=self.prefix_cache,
+                share_prefix=share_prefill)
             for i in range(scfg.num_prefill_instances)]
+        if share_prefill:
+            # cache-aware PBAA must credit EXACTLY what the engines will
+            # claim: swap the scheduler's simulated index for a view over
+            # the real page binders (insert is engine-owned, a no-op here)
+            binder_of = {}
+            for i, eng in enumerate(self.engines):
+                for d in self.state.prefill_dps_of(i):
+                    binder_of[d.dp_id] = eng.binder
+            self.sched.cache = EngineBackedPrefixIndex(binder_of)
         self.decode_engines = [
             RealDecodeEngine(
                 i, [d.dp_id for d in self.state.decode_dps_of(i)],
-                self.spec, self.bus)
+                self.spec, self.bus, share_prefix=self.prefix_cache)
             for i in range(scfg.num_decode_instances)]
         self.runtime = ClusterRuntime(
             self.state, prefill_sched=self.sched,
@@ -150,3 +178,23 @@ class RealSBSServer:
                 ttft=r.ttft if r.ttft is not None else float("nan"),
                 finish=r.finish_time))
         return sorted(out, key=lambda g: g.rid)
+
+    def prefix_stats(self) -> dict:
+        """Engine-truth reuse counters (all zero when prefix_cache=False):
+        prefill hit tokens/rate and skipped full prompts, decode pages
+        shared at join and eager COW copies."""
+        hit = sum(e.binder.hit_tokens for e in self.engines
+                  if e.binder is not None)
+        seen = sum(e.binder.seen_tokens for e in self.engines
+                   if e.binder is not None)
+        return {
+            "prefix_hit_tokens": hit,
+            "prefix_seen_tokens": seen,
+            "prefix_hit_rate": hit / seen if seen else 0.0,
+            "prefill_full_hits": sum(e.full_hits for e in self.engines),
+            "prefill_chunks_run": sum(e.chunks_run for e in self.engines),
+            "decode_blocks_shared": sum(e.blocks_shared
+                                        for e in self.decode_engines),
+            "decode_cow_copies": sum(e.cow_copies
+                                     for e in self.decode_engines),
+        }

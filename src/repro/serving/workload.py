@@ -9,12 +9,17 @@
 - heavy_tail: long-context heavy-tail (lognormal σ=1.6, up to 128K) —
               a few huge documents amid chat traffic (stresses chunking
               and KV-load balance)
+- shared_prefix: multi-tenant traffic where every request opens with its
+              tenant's system prompt; tenants are Zipf-popular, so a few
+              hot prompts dominate (the prefix-cache / page-sharing
+              scenario — hit rate tracks Zipf mass × prefix fraction)
 
 Arrivals are Poisson (the M in the paper's M/D/S analysis); bursty
 workloads modulate the rate between a high and a low state.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import random
@@ -35,6 +40,11 @@ class WorkloadSpec:
     burst_factor: float = 1.0     # peak rate = burst_factor × mean rate
     burst_duty: float = 0.3       # fraction of each cycle at peak rate
     burst_period: float = 2.0     # seconds per on/off cycle
+    # multi-tenant system prompts (n_tenants > 0 => every request starts
+    # with its tenant's prompt; tenant popularity is Zipf(tenant_zipf))
+    n_tenants: int = 0
+    tenant_zipf: float = 1.2
+    tenant_prefix_len: int = 384
 
 
 SHORT = WorkloadSpec("short", 16, 3000, 1000.0)
@@ -43,9 +53,28 @@ DECODE = WorkloadSpec("decode", 512, 4096, 2000.0, out_mean=500)
 BURSTY = WorkloadSpec("bursty", 16, 3000, 1000.0,
                       burst_factor=3.0, burst_duty=0.25, burst_period=2.0)
 HEAVY_TAIL = WorkloadSpec("heavy_tail", 64, 131072, 2500.0, sigma=1.6)
+SHARED_PREFIX = WorkloadSpec("shared_prefix", 256, 3000, 1000.0,
+                             n_tenants=24, tenant_zipf=1.2,
+                             tenant_prefix_len=384)
 
 SPECS = {"short": SHORT, "long": LONG, "decode": DECODE,
-         "bursty": BURSTY, "heavy_tail": HEAVY_TAIL}
+         "bursty": BURSTY, "heavy_tail": HEAVY_TAIL,
+         "shared_prefix": SHARED_PREFIX}
+
+
+def _zipf_cdf(n: int, s: float) -> List[float]:
+    w = [1.0 / (k ** s) for k in range(1, n + 1)]
+    tot = sum(w)
+    acc, cdf = 0.0, []
+    for x in w:
+        acc += x
+        cdf.append(acc / tot)
+    return cdf
+
+
+def sample_tenant(rng: random.Random, cdf: List[float]) -> int:
+    """Zipf-popular tenant id: 0 is the hottest."""
+    return min(bisect.bisect_left(cdf, rng.random()), len(cdf) - 1)
 
 
 def _lognormal_params(spec: WorkloadSpec) -> tuple:
@@ -117,17 +146,36 @@ def generate(
     vocab: int = 50000,
 ) -> List[Request]:
     """Arrivals over [0, duration) per the spec's process. Optionally attach
-    token ids with shared prefixes (for cache-aware scheduling)."""
+    token ids with shared prefixes (for cache-aware scheduling).
+
+    When `spec.n_tenants` > 0 (the `shared_prefix` scenario) every
+    tokenized request opens with its tenant's system prompt — tenant
+    picked Zipf(spec.tenant_zipf), so a handful of hot prompts carry most
+    of the traffic; `shared_prefix_prob` is ignored in that mode.  A
+    sampled length shorter than the prompt truncates it (a prefix of a
+    system prompt still shares pages with its siblings)."""
     rng = random.Random(seed)
     reqs: List[Request] = []
     rid = 0
     prefixes = [tuple(rng.randrange(vocab) for _ in range(256))
                 for _ in range(4)]
+    tenant_cdf, tenant_prompts = None, []
+    if spec.n_tenants > 0:
+        tenant_cdf = _zipf_cdf(spec.n_tenants, spec.tenant_zipf)
+        tenant_prompts = [
+            tuple(rng.randrange(vocab)
+                  for _ in range(spec.tenant_prefix_len))
+            for _ in range(spec.n_tenants)]
     for t in arrival_times(spec, qps, duration, rng):
         L = sample_length(spec, rng)
         tokens = None
         if with_tokens:
-            if rng.random() < shared_prefix_prob:
+            if tenant_prompts:
+                pre = tenant_prompts[sample_tenant(rng, tenant_cdf)]
+                body = tuple(rng.randrange(vocab)
+                             for _ in range(max(L - len(pre), 0)))
+                tokens = (pre + body)[:L]
+            elif rng.random() < shared_prefix_prob:
                 pre = prefixes[rng.randrange(len(prefixes))]
                 body = tuple(rng.randrange(vocab)
                              for _ in range(max(L - len(pre), 0)))

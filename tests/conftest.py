@@ -23,6 +23,37 @@ def pytest_configure(config):
 
 
 # ---------------------------------------------------------------------------
+# Memory-mapping guard.  Every jitted computation XLA:CPU compiles keeps
+# LLVM ORC JIT code pages mapped for the life of the executable, several
+# small mappings each; a full -x -q run accumulates tens of thousands and
+# a process that crosses the kernel's vm.max_map_count (65530 default)
+# SEGFAULTS inside the next backend_compile — the mmap failure surfaces
+# as a crash, not an exception.  Dropping the jit caches at module
+# boundaries frees the code pages (recompilation on next use is the only
+# cost), so the suite's mapping footprint is bounded by its heaviest
+# single module instead of its sum.
+# ---------------------------------------------------------------------------
+
+_MAPS_SOFT_LIMIT = 20_000
+
+
+def _n_mappings() -> int:
+    try:
+        with open("/proc/self/maps") as f:
+            return sum(1 for _ in f)
+    except OSError:                     # non-Linux: nothing to guard
+        return 0
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_code_mappings():
+    yield
+    if _n_mappings() > _MAPS_SOFT_LIMIT:
+        import jax
+        jax.clear_caches()
+
+
+# ---------------------------------------------------------------------------
 # Shared, session-scoped model setup. get_arch() is cheap but init_params +
 # the first jitted forward of each (arch, shape) pair dominates the suite's
 # runtime — cache them once per session instead of once per test.
