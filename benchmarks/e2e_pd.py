@@ -100,6 +100,48 @@ def _paged_concurrency(report, quick: bool) -> Dict:
     return out
 
 
+def _overload_control(report, quick: bool) -> Dict:
+    """SLO-aware overload control A/B (sbs-la, equal KV memory): the same
+    spike/diurnal traffic with priority classes through (a) the plain
+    pipeline ('baseline' — stalled work only moves via watchdog drain),
+    (b) page-level preemption, (c) preemption + arrival flow control.
+    Goodput (SLO-attained fraction, per-class deadlines) is the headline:
+    shedding or swapping batch work must buy interactive goodput, not
+    just shuffle load."""
+    from repro.serving.workload import SPECS
+
+    cfg = get_arch(ARCH)
+    # a deliberately tight decode pool: the spike must actually exhaust
+    # KV budgets, otherwise there is nothing to control
+    scfg = ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=4,
+                         num_decode_instances=2, decode_dp_per_instance=4,
+                         chunk_size=3072, t_default=0.5,
+                         max_batch_per_dp=16, kv_budget_tokens=12_000)
+    duration = 6 if quick else 15
+    qps = 24
+    out: Dict = {}
+    report("\n### SLO-aware overload control (sbs-la, equal KV budget "
+           f"{scfg.kv_budget_tokens} tok/DP)")
+    for scen in ("overload_spike", "diurnal"):
+        spec = SPECS[scen]
+        report(f"#### scenario: {scen} (qps={qps})")
+        out[scen] = {}
+        for mode, kw in (
+                ("baseline", {}),
+                ("preempt", dict(preemption=True)),
+                ("preempt_flow", dict(preemption=True, flow_control=True))):
+            reqs = generate(spec, qps=qps, duration=duration, seed=23)
+            sim = PDClusterSim(cfg, dataclasses.replace(scfg, **kw),
+                               scheduler="sbs-la")
+            rep = sim.run(reqs, duration)
+            out[scen][mode] = rep.json_row()
+            report(f"{mode:>13}  {rep.row()}")
+        gain = (out[scen]["preempt"]["goodput"]
+                - out[scen]["baseline"]["goodput"])
+        report(f"{'':>13}  preempt vs baseline goodput: {gain*100:+.1f}pp")
+    return out
+
+
 def main(report, quick: bool = False) -> List[str]:
     global JSON_PAYLOAD
     rows: List[str] = []
@@ -141,6 +183,13 @@ def main(report, quick: bool = False) -> List[str]:
     rows.append(f"e2e/paged_concurrency,"
                 f"{pc['paged']['concurrency_per_dp']:.1f},"
                 f"padded={pc['padded_maxlen']['concurrency_per_dp']:.1f}")
+    oc = _overload_control(report, quick)
+    payload["overload"] = oc
+    for scen, modes in oc.items():
+        rows.append(
+            f"e2e/overload/{scen},"
+            f"goodput_base={modes['baseline']['goodput']*100:.1f}%,"
+            f"goodput_preempt={modes['preempt']['goodput']*100:.1f}%")
     # namespace by sweep mode: --quick (duration 5, first qps) and full
     # (duration 15, all qps) numbers are systematically different, so
     # they live under separate keys — a quick rerun can never overwrite

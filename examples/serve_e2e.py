@@ -22,6 +22,16 @@ repeat-heavy traffic served twice at EQUAL KV memory — prefix caching
 off, then on (refcounted page sharing + COW).  Requires the cached run
 to post a lower TTFT p99 and > 0 prefill FLOPs saved, and records both
 sides in the payload's `real_plane_prefix` section.
+
+`--overload-bench` runs the SLO-overload A/B instead: batch-class KV
+hogs fill the ENTIRE paged decode pool, then interactive requests with
+a tight e2e deadline arrive mid-decode.  The same trace is served twice
+at EQUAL KV memory — drain-only (deferred joins wait for residents to
+finish) vs page-level preemption (lower-priority residents are swapped
+out to host and resumed later).  Requires the preempting run to post
+strictly higher goodput (SLO-attained fraction) with every request
+still finishing, and records both sides in the payload's
+`real_plane_overload` section.
 """
 import argparse
 import json
@@ -190,6 +200,124 @@ def run_prefix_bench(cfg, params, args):
     return ok, section
 
 
+def run_overload_bench(cfg, params, args):
+    """SLO-overload A/B on the real plane: same trace, equal KV memory,
+    drain-only vs page-level preemption.  Returns (ok, report-section).
+
+    The decode pool is sized so ONE batch-class hog fills a whole DP
+    (max_batch_per_dp=1 → 10 blocks of 16 at max_len 160; a 24-in /
+    128-out hog reserves exactly 10 blocks for its lifetime).  Six hogs
+    in tight waves keep both DPs saturated for several hog generations;
+    two interactive requests (priority 0, tight deadline) arrive while
+    the first wave is mid-decode, so their joins defer on device
+    capacity.  Drain-only: they queue BEHIND the later hog waves (joins
+    retry FIFO) and blow the deadline.  Preempting: the runtime swaps a hog's pages to host
+    (generation state intact), the interactive request joins
+    immediately, and the hogs resume once their blocks free up — every
+    request still finishes, but now inside its SLO."""
+    import dataclasses
+
+    bs = args.block_size or 16
+    scfg = ServingConfig(
+        num_prefill_instances=1, prefill_dp_per_instance=2,
+        num_decode_instances=1, decode_dp_per_instance=2,
+        chunk_size=32, t_default=0.05, l_net=0.001,
+        max_batch_per_dp=1, block_size=bs)
+    rng = random.Random(args.seed)
+    n_hogs = 6
+    hog_in, hog_out = 24, MAX_LEN - 24 - 8     # lifetime 152 ≤ max_len 160
+    int_in, int_out = 72, 4
+    hog_toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(hog_in))
+                for _ in range(n_hogs)]
+    int_toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(int_in))
+                for _ in range(2)]
+
+    def fresh():
+        hogs = [Request(rid=i, arrival_time=0.01 * i, input_len=hog_in,
+                        output_len=hog_out, tokens=hog_toks[i],
+                        priority=2, slo_e2e=float(args.timeout),
+                        slo_class="batch")
+                for i in range(n_hogs)]
+        inter = [Request(rid=10 + i, arrival_time=0.15 + 0.03 * i,
+                         input_len=int_in, output_len=int_out,
+                         tokens=int_toks[i],
+                         priority=0, slo_e2e=args.interactive_slo,
+                         slo_class="interactive")
+                 for i in range(2)]
+        return hogs + inter
+
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN,
+                      max_batch=scfg.max_batch_per_dp, max_new=hog_out,
+                      block_size=bs, decode_slots=scfg.resolved_decode_slots)
+    # warmup must compile BOTH paged-join shapes (the jitted join
+    # specialises on the block count) or the first timed run pays the
+    # compiles and the A/B compares compile time, not scheduling
+    warm = [Request(rid=998, arrival_time=0.0, input_len=hog_in,
+                    output_len=hog_out, tokens=hog_toks[0]),
+            Request(rid=999, arrival_time=0.1, input_len=int_in,
+                    output_len=int_out, tokens=int_toks[0])]
+    # throwaway compile pass: the very first serve pays every jit
+    # compile, and a mode whose own warmup measured compile-bloated wall
+    # times would enter the timed run with a hugely inflated adaptive
+    # interval — burn the compiles OUTSIDE the A/B so both modes' warmups
+    # adapt from warm timings
+    RealSBSServer(cfg, params, serving_cfg=scfg, scheduler="sbs-la",
+                  max_len=MAX_LEN, max_new=hog_out, spec=spec).serve(
+        [dataclasses.replace(r) for r in warm], timeout=args.timeout)
+    print(f"\n#### SLO-overload A/B: {n_hogs} batch hogs "
+          f"({hog_in}in/{hog_out}out, one fills a DP) + 2 interactive "
+          f"({int_in}in/{int_out}out, slo={args.interactive_slo:.1f}s), "
+          f"block_size={bs}")
+    ok = True
+    section = {"block_size": bs, "interactive_slo": args.interactive_slo}
+    for mode in ("drain_only", "preempt"):
+        srv = RealSBSServer(cfg, params,
+                            serving_cfg=dataclasses.replace(
+                                scfg, preemption=(mode == "preempt")),
+                            scheduler="sbs-la", max_len=MAX_LEN,
+                            max_new=hog_out, spec=spec)
+        # warmup compiles every jitted shape outside the timed window
+        srv.serve([dataclasses.replace(r) for r in warm],
+                  timeout=args.timeout)
+        reqs = fresh()
+        gens = srv.serve(reqs, timeout=args.timeout)
+        if len(gens) < len(reqs):
+            missing = sorted(set(r.rid for r in reqs)
+                             - set(g.rid for g in gens))
+            print(f"  {mode}: UNFINISHED rids {missing}")
+            ok = False
+        inter = [r for r in reqs if r.slo_class == "interactive"]
+        attained = [r for r in reqs if r.slo_attained()]
+        section[mode] = {
+            "goodput": len(attained) / len(reqs),
+            "goodput_interactive": (sum(1 for r in inter
+                                        if r.slo_attained())
+                                    / max(len(inter), 1)),
+            "e2e_interactive": [
+                (r.finish_time - r.arrival_time
+                 if r.finish_time is not None else None) for r in inter],
+            "preemptions": len(srv.runtime.preempted),
+            "finished": len(gens),
+        }
+        s = section[mode]
+        e2e = ["--" if v is None else f"{v:5.2f}s"
+               for v in s["e2e_interactive"]]
+        print(f"  {mode:>10}: goodput={s['goodput']*100:5.1f}% "
+              f"interactive={s['goodput_interactive']*100:5.1f}% "
+              f"e2e_int={e2e} preemptions={s['preemptions']}")
+    if ok:
+        d, p = section["drain_only"], section["preempt"]
+        if not (p["goodput"] > d["goodput"] and p["preemptions"] > 0):
+            print("  overload gate FAILED: need preempt goodput strictly "
+                  "above drain-only and preemptions > 0")
+            ok = False
+        else:
+            print(f"  gate OK: goodput {d['goodput']*100:.1f}% -> "
+                  f"{p['goodput']*100:.1f}% "
+                  f"({p['preemptions']} preemptions)")
+    return ok, section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -213,6 +341,13 @@ def main():
                     help="run the shared-prefix caching A/B (equal KV "
                          "memory, caching off vs on) instead of the "
                          "scheduler sweep")
+    ap.add_argument("--overload-bench", action="store_true",
+                    help="run the SLO-overload A/B (equal KV memory, "
+                         "drain-only vs page-level preemption) instead "
+                         "of the scheduler sweep")
+    ap.add_argument("--interactive-slo", type=float, default=0.6,
+                    help="e2e deadline (s) for the interactive class in "
+                         "--overload-bench")
     args = ap.parse_args()
     if args.compare_padded and not args.block_size:
         ap.error("--compare-padded needs a paged plane (--block-size > 0); "
@@ -222,8 +357,13 @@ def main():
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    if args.prefix_bench:
-        ok, section = run_prefix_bench(cfg, params, args)
+    if args.prefix_bench or args.overload_bench:
+        if args.prefix_bench:
+            key, (ok, section) = ("real_plane_prefix",
+                                  run_prefix_bench(cfg, params, args))
+        else:
+            key, (ok, section) = ("real_plane_overload",
+                                  run_overload_bench(cfg, params, args))
         if args.bench_json:
             payload = {}
             if os.path.exists(args.bench_json):
@@ -232,11 +372,11 @@ def main():
                         payload = json.load(f)
                 except (OSError, ValueError):
                     payload = {}
-            payload["real_plane_prefix"] = section
+            payload[key] = section
             with open(args.bench_json, "w") as f:
                 json.dump(payload, f, indent=2, sort_keys=True)
             print(f"\nupdated {os.path.abspath(args.bench_json)} "
-                  f"[real_plane_prefix]")
+                  f"[{key}]")
         sys.exit(0 if ok else 1)
 
     fresh = make_requests(args.requests, cfg, args.max_new, args.seed,

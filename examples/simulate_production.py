@@ -10,8 +10,10 @@ import dataclasses
 
 from repro.config import ServingConfig, get_arch
 from repro.serving.cluster import DecodeClusterSim, PrefillClusterSim
+from repro.serving.e2e import PDClusterSim
 from repro.serving.workload import (
-    BURSTY, HEAVY_TAIL, SHARED_PREFIX, SHORT, WorkloadSpec, generate,
+    BURSTY, DIURNAL, HEAVY_TAIL, OVERLOAD_SPIKE, SHARED_PREFIX, SHORT,
+    WorkloadSpec, generate,
 )
 
 
@@ -69,6 +71,29 @@ def main():
         rep = sim.run(reqs, 30.0 if args.quick else 60.0,
                       closed_loop=32 * 35)
         print(f"{sched:10s} {rep.row()}")
+
+    print("\n== Overload control: SLO classes under a 5x spike and a "
+          "compressed diurnal cycle ==")
+    # a deliberately tight decode pool (2x4 DP, 12K KV tokens each): the
+    # spike exhausts the KV budgets, so preemption/flow-control have real
+    # choices; goodput buckets by class deadline (see core.types)
+    ocfg = ServingConfig(num_prefill_instances=2, prefill_dp_per_instance=4,
+                         num_decode_instances=2, decode_dp_per_instance=4,
+                         chunk_size=3072, t_default=0.5,
+                         max_batch_per_dp=16, kv_budget_tokens=12_000)
+    odur = 6.0 if args.quick else 15.0
+    for scen, spec in (("overload_spike", OVERLOAD_SPIKE),
+                       ("diurnal", DIURNAL)):
+        print(f"-- {scen} (qps=24, sbs-la)")
+        for mode, kw in (("baseline", {}),
+                         ("preempt", dict(preemption=True)),
+                         ("preempt+flow", dict(preemption=True,
+                                               flow_control=True))):
+            reqs = generate(spec, qps=24, duration=odur, seed=23)
+            sim = PDClusterSim(cfg, dataclasses.replace(ocfg, **kw),
+                               scheduler="sbs-la")
+            rep = sim.run(reqs, odur)
+            print(f"{mode:>13}  {rep.row()}")
 
 
 if __name__ == "__main__":

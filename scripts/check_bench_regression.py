@@ -11,7 +11,10 @@ are informational and skipped).  Rows whose baseline carries a positive
 `prefix_hit_rate` (the shared_prefix scenario) are additionally guarded
 against the cache-hit rate dropping by more than the threshold — a
 silent loss of page reuse fails the build like a latency regression
-would.  The sims are deterministic, so the threshold guards real
+would.  Likewise rows with a positive baseline `goodput` (every e2e
+scenario, including the overload-control A/B section) fail on a goodput
+drop beyond the threshold — overload control shedding load it used to
+serve is a regression, not a tuning choice.  The sims are deterministic, so the threshold guards real
 scheduling/cost-model regressions, not noise — but --quick baselines
 must be compared against --quick runs.
 """
@@ -97,6 +100,11 @@ def main() -> int:
             hit_note = f" hit x{hit_ratio:.3f}"
             if hit_ratio < 1.0 - args.threshold:
                 verdicts.append(f"prefix_hit_rate {hit_ratio - 1:+.1%}")
+        if b.get("goodput", 0.0) > 0.0:
+            good_ratio = f_.get("goodput", 0.0) / b["goodput"]
+            hit_note += f" good x{good_ratio:.3f}"
+            if good_ratio < 1.0 - args.threshold:
+                verdicts.append(f"goodput {good_ratio - 1:+.1%}")
         status = "FAIL " + ", ".join(verdicts) if verdicts else "ok"
         print(f"  {name:<44} ttft_p99 x{ttft_ratio:.3f} "
               f"thr x{thr_ratio:.3f}{hit_note}  {status}")

@@ -21,7 +21,12 @@
 #                               any unfinished request or if paged does
 #                               not sustain strictly higher concurrent
 #                               decode; records the result in
-#                               BENCH_e2e.json [real_plane]
+#                               BENCH_e2e.json [real_plane].  Then the
+#                               prefix-cache A/B [real_plane_prefix] and
+#                               the SLO-overload A/B — page-level
+#                               preemption must post strictly higher
+#                               goodput than drain-only at equal KV
+#                               memory [real_plane_overload]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,6 +46,13 @@ if [[ "${1:-}" == "--real-smoke" ]]; then
         --prefix-bench --bench-json BENCH_e2e.json \
         || { echo "prefix smoke FAILED (no FLOPs saved, cached ttft_p99" \
                   "not lower, unfinished requests, or >300s)" >&2
+             exit 1; }
+    echo "== real-plane SLO-overload A/B (preempt vs drain-only, 300s budget) =="
+    PYTHONPATH=src timeout 300 python examples/serve_e2e.py \
+        --timeout 150 --overload-bench --bench-json BENCH_e2e.json \
+        || { echo "overload smoke FAILED (preempting goodput not strictly" \
+                  "above drain-only, no preemptions, unfinished requests," \
+                  "or >300s)" >&2
              exit 1; }
     echo "REAL SMOKE OK"
     exit 0

@@ -247,6 +247,20 @@ class ServingConfig:
     # padded-equivalent memory budget (slots × max_len tokens).
     block_size: int = 0
     decode_slots_per_dp: int = 0            # 0 => auto (see resolved_decode_slots)
+    # SLO-aware overload control.  `preemption` arms page-level decode
+    # preemption: when a waiter cannot be admitted (real plane: free
+    # blocks short; sim plane: KV budget exceeded), lower-priority
+    # residents are swapped out (KV parked with generation state) and
+    # re-admitted through the normal join path when pressure drops.
+    # `flow_control` arms the runtime's arrival gate: while the decode
+    # pool is saturated, arrivals are throttled (re-queued with
+    # exponential backoff) and eventually rejected, least-urgent
+    # priority class first.  `slo_default` is the E2E deadline used for
+    # goodput when a request carries no per-class slo_e2e.
+    preemption: bool = False
+    flow_control: bool = False
+    flow_backoff: float = 0.05
+    slo_default: float = 20.0
 
     def __post_init__(self):
         if self.decode_slots_per_dp and not self.block_size:

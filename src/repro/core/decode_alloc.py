@@ -85,9 +85,10 @@ def schedule_decode_batch(
     """ScheduleBatch(R, N) — returns dp_id -> assigned requests and updates
     unit states in place."""
     out: Dict[int, List[Request]] = {}
-    # Length-Based Pre-Sorting (fill-the-valley)
+    # Length-Based Pre-Sorting (fill-the-valley); priority classes place
+    # first, so urgent work sees the richest decision space
     order = sorted(requests,
-                   key=lambda r: -(r.input_len + r.output_len))
+                   key=lambda r: (r.priority, -(r.input_len + r.output_len)))
     for req in order:
         safe = iqr_safe_set(units, k)
         best: Optional[DecodeDPState] = None
@@ -139,7 +140,8 @@ def schedule_decode_global(
     for u in eligible:
         all_of.setdefault(u.instance_id, []).append(u)
     out: Dict[int, List[Request]] = {}
-    order = sorted(requests, key=lambda r: -(r.input_len + r.output_len))
+    order = sorted(requests,
+                   key=lambda r: (r.priority, -(r.input_len + r.output_len)))
     for req in order:
         safe = iqr_safe_set(eligible, k)
         best = _best_affinity(req, safe, affinity)
@@ -162,6 +164,55 @@ def schedule_decode_global(
         req.assigned_dp = best.dp_id
         out.setdefault(best.dp_id, []).append(req)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Page-level preemption — victim selection (SLO-aware overload control)
+# ---------------------------------------------------------------------------
+
+def kv_footprint(req: Request, block_size: int) -> int:
+    """KV tokens a resident request's reservation holds: its lifetime
+    (input + output) rounded up to whole blocks when paged — the same
+    ceiling rule admission reserved by, so preempting the victim frees
+    exactly this much headroom."""
+    total = req.input_len + req.output_len
+    if not block_size:
+        return total
+    from repro.core.types import blocks_for_tokens
+    return blocks_for_tokens(total, block_size) * block_size
+
+
+def select_victims(
+    residents: Sequence[Request],
+    need_tokens: int,
+    block_size: int = 0,
+    max_priority: Optional[int] = None,
+) -> List[Request]:
+    """Pick the requests to swap out to free >= `need_tokens` of KV.
+
+    Policy (one model for the sim and real planes): only requests of
+    priority STRICTLY LOWER than `max_priority` are eligible (a waiter
+    can never evict its own class or better — the strict ordering is
+    what makes preemption cycle-free); among eligible residents the
+    least-urgent class goes first, ties broken by least generation
+    progress (cheapest swap payload, most remaining work to benefit from
+    re-placement) then youngest arrival (preserve FCFS within a class).
+    Victims accumulate until their reservations cover the need; returns
+    [] when the eligible set cannot cover it (partial preemption would
+    burn swaps without admitting the waiter)."""
+    if need_tokens <= 0:
+        return []
+    elig = [r for r in residents
+            if max_priority is None or r.priority > max_priority]
+    elig.sort(key=lambda r: (-r.priority, r.generated, -r.arrival_time))
+    out: List[Request] = []
+    freed = 0
+    for r in elig:
+        out.append(r)
+        freed += kv_footprint(r, block_size)
+        if freed >= need_tokens:
+            return out
+    return []
 
 
 # ---------------------------------------------------------------------------

@@ -50,8 +50,11 @@ def greedy_dispatch(
     length against the capacity cost (§4.2.2 'Optimization for Context
     Caching')."""
     leftovers: List[Request] = []
-    # line 2: sort by length descending (reduce fragmentation)
-    order = sorted(queue, key=lambda r: -r.remaining_prefill)
+    # line 2: sort by length descending (reduce fragmentation); priority
+    # classes cut first — an interactive request is granted chunk
+    # capacity before any longer batch request (with uniform priorities
+    # this is exactly the paper's length order)
+    order = sorted(queue, key=lambda r: (r.priority, -r.remaining_prefill))
     avail = {d.dp_id: d.c_avail for d in dps}
     for req in order:
         if req.assigned_dp is not None:

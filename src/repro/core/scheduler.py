@@ -135,10 +135,13 @@ class StaggeredBatchScheduler(PrefillScheduler):
             cache=self.cache)
         self.cycles += 1
         self.util_history.append(chunk_utilization(assignments, dps))
-        # flow control on over-limit requests
+        # flow control on over-limit requests (per-request outcomes:
+        # admit_request resets the wait-cycle clock if the verdict is
+        # ADMIT, so a request that got through restarts from zero on the
+        # next pressure episode)
         kept: List[Request] = []
         for r in over:
-            act = self.flow.decide(r.wait_cycles)
+            act = self.flow.admit_request(r)
             if act == FlowAction.REJECT:
                 r.phase = RequestPhase.REJECTED
                 self.rejected.append(r)

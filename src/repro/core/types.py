@@ -26,8 +26,32 @@ class RequestPhase(str, enum.Enum):
     DISPATCHED = "dispatched"    # in flight to / inside an engine
     PREFILLING = "prefilling"
     DECODING = "decoding"
+    PREEMPTED = "preempted"      # swapped out; KV parked, awaiting re-admit
     FINISHED = "finished"
     REJECTED = "rejected"        # flow control
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A service class: dispatch priority (0 = most urgent) plus the
+    end-to-end latency target its requests are judged against (goodput =
+    the throughput of requests that finish within their class SLO)."""
+    name: str
+    priority: int
+    slo_e2e: float
+
+
+#: default class ladder — workload generation samples from these, victim
+#: selection / PBAA / decode allocation order by `priority`, and the
+#: goodput report buckets by `name`.  Override per deployment by building
+#: Requests with explicit `priority` / `slo_e2e` fields.
+SLO_CLASSES: Dict[str, SLOClass] = {
+    "interactive": SLOClass("interactive", 0, 5.0),
+    "standard": SLOClass("standard", 1, 20.0),
+    "batch": SLOClass("batch", 2, 120.0),
+}
+
+DEFAULT_SLO_CLASS = "standard"
 
 
 @dataclasses.dataclass
@@ -38,6 +62,11 @@ class Request:
     output_len: int = 1
     tokens: Optional[Tuple[int, ...]] = None    # actual ids (prefix caching)
     phase: RequestPhase = RequestPhase.QUEUED
+    # SLO / priority class (overload control).  priority 0 is the most
+    # urgent; slo_e2e None falls back to the report-level default SLO.
+    priority: int = 1
+    slo_e2e: Optional[float] = None
+    slo_class: str = DEFAULT_SLO_CLASS
     # scheduling bookkeeping
     wait_cycles: int = 0                        # PBAA starvation counter
     remaining_prefill: int = 0                  # tokens not yet prefetched
@@ -46,6 +75,7 @@ class Request:
     assigned_dp: Optional[int] = None
     assigned_instance: Optional[int] = None
     migrations: int = 0                         # decode watchdog re-dispatches
+    preemptions: int = 0                        # page-level swap-outs
     # timestamps
     dispatch_time: Optional[float] = None
     prefill_start: Optional[float] = None
@@ -61,6 +91,22 @@ class Request:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
+
+    def deadline(self, default_slo: Optional[float] = None
+                 ) -> Optional[float]:
+        """Absolute wall/virtual time by which the request must finish to
+        count toward goodput; None when no SLO applies."""
+        slo = self.slo_e2e if self.slo_e2e is not None else default_slo
+        if slo is None:
+            return None
+        return self.arrival_time + slo
+
+    def slo_attained(self, default_slo: Optional[float] = None) -> bool:
+        """Finished within its SLO?  Unfinished/rejected never attain."""
+        if self.finish_time is None:
+            return False
+        d = self.deadline(default_slo)
+        return d is None or self.finish_time <= d
 
     @property
     def queueing_delay(self) -> Optional[float]:

@@ -10,16 +10,17 @@ latency, and goodput (requests completing within an SLO).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
+from repro.core.flow_control import FlowController
 from repro.core.types import Request
 from repro.serving.cluster import (
     build_decode_instances, build_decode_scheduler, build_prefill_instances,
     build_prefill_scheduler, build_state,
 )
 from repro.serving.costmodel import CostModel, ICI_BW
-from repro.serving.metrics import mean, percentile
+from repro.serving.metrics import goodput_by_class, mean, percentile
 from repro.serving.runtime import ClusterRuntime
 
 
@@ -36,6 +37,11 @@ class E2EReport:
     throughput: float = 0.0        # decode tokens / s over the run
     prefix_hit_rate: float = 0.0   # cached prefix tokens / prompt tokens
     prefill_flops_saved: float = 0.0   # FLOPs skipped via prefix reuse
+    # SLO-aware overload control (all zero/empty when it is off)
+    goodput_by_class: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    rejected: int = 0              # flow-control rejections
+    preemptions: int = 0           # page-level swap-out events
 
     def row(self) -> str:
         out = (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
@@ -47,6 +53,12 @@ class E2EReport:
         if self.prefix_hit_rate:
             out += (f" hit={self.prefix_hit_rate*100:.1f}% "
                     f"saved={self.prefill_flops_saved:.2e}FLOPs")
+        if self.rejected or self.preemptions:
+            out += f" rej={self.rejected} preempt={self.preemptions}"
+        if len(self.goodput_by_class) > 1:
+            out += " [" + " ".join(
+                f"{c}={g*100:.0f}%"
+                for c, g in self.goodput_by_class.items()) + "]"
         return out
 
     def json_row(self) -> dict:
@@ -55,7 +67,10 @@ class E2EReport:
                 "ttft_mean": self.ttft_mean, "tpot_mean": self.tpot_mean,
                 "throughput": self.throughput, "goodput": self.goodput,
                 "prefix_hit_rate": self.prefix_hit_rate,
-                "prefill_flops_saved": self.prefill_flops_saved}
+                "prefill_flops_saved": self.prefill_flops_saved,
+                "goodput_by_class": self.goodput_by_class,
+                "rejected": self.rejected,
+                "preemptions": self.preemptions}
 
 
 class PDClusterSim:
@@ -85,18 +100,23 @@ class PDClusterSim:
             watchdog_multiplier=watchdog_multiplier)
         self.prefill = build_prefill_instances(self.state, scfg, self.cost)
         self.decode = build_decode_instances(self.state, scfg, self.cost)
+        flow = (FlowController(n_limit=scfg.n_limit,
+                               backoff_base=scfg.flow_backoff)
+                if scfg.flow_control else None)
         self.runtime = ClusterRuntime(
             self.state, prefill_sched=self.psched,
             prefill_instances=self.prefill, decode_sched=self.dsched,
             decode_instances=self.decode,
-            transfer_time=self._transfer_time)
+            transfer_time=self._transfer_time,
+            flow=flow, preemption=scfg.preemption)
 
     def _transfer_time(self, req: Request) -> float:
         bytes_ = self.cost.kv_bytes_per_token * req.input_len
         return bytes_ / self.transfer_bw + 0.002
 
     def run(self, requests: Sequence[Request], duration: float,
-            slo_e2e: float = 20.0) -> E2EReport:
+            slo_e2e: Optional[float] = None) -> E2EReport:
+        slo = slo_e2e if slo_e2e is not None else self.scfg.slo_default
         end = self.runtime.run(requests, duration,
                                horizon=duration * 30 + 120.0)
         done = [r for r in requests if r.finish_time is not None]
@@ -104,7 +124,11 @@ class PDClusterSim:
         tpots = [(r.finish_time - r.first_token_time) / max(r.generated - 1, 1)
                  for r in done if r.first_token_time is not None]
         e2e = [r.finish_time - r.arrival_time for r in done]
-        good = sum(1 for x in e2e if x <= slo_e2e) / max(len(requests), 1)
+        # goodput = SLO-attained throughput: a request's own slo_e2e (its
+        # priority class) wins over the deployment default; rejected and
+        # unfinished requests stay in the denominator
+        good = (sum(1 for r in requests if r.slo_attained(slo))
+                / max(len(requests), 1))
         # prefix-reuse accounting: the sim prices savings with the SAME
         # cost model the dispatcher uses, so sim and real planes share one
         # reuse model (the real plane reports engine-truth counters via
@@ -120,4 +144,7 @@ class PDClusterSim:
             tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
             prefill_util=self.runtime.prefill_util,
             throughput=self.runtime.tokens_generated / max(end, 1e-9),
-            prefix_hit_rate=hit_rate, prefill_flops_saved=saved)
+            prefix_hit_rate=hit_rate, prefill_flops_saved=saved,
+            goodput_by_class=goodput_by_class(requests, slo),
+            rejected=len(self.runtime.rejected),
+            preemptions=len(self.runtime.preempted))

@@ -168,6 +168,22 @@ class SimDecodeInstance(DecodeEngine):
         self.epoch += 1     # any step_end still in flight is now stale
         return out
 
+    def preempt(self, rid: int) -> Optional[Request]:
+        """Page-level preemption, per victim (the drain() mechanics at
+        request granularity): remove one resident request so its KV can
+        be parked and re-admitted later through the normal join path.
+        The caller owns releasing the DecodeDPState accounting.  Refused
+        (None) while a step is in flight — a swap must never race the
+        instance barrier."""
+        if self.busy:
+            return None
+        for d in self.dp_ids:
+            for r in self.running[d]:
+                if r.rid == rid:
+                    self.running[d].remove(r)
+                    return r
+        return None
+
     def _target_len(self, req: Request) -> int:
         """Tokens at which `req` is finished (real plane may cap this)."""
         return req.output_len

@@ -29,6 +29,22 @@ def std(xs: Sequence[float]) -> float:
     return math.sqrt(sum((x - m) ** 2 for x in xs) / (len(xs) - 1))
 
 
+def goodput_by_class(requests: Sequence[Request],
+                     default_slo: Optional[float] = None
+                     ) -> Dict[str, float]:
+    """SLO-attained fraction per priority class.  The denominator is the
+    WHOLE offered class — rejected and unfinished requests count against
+    goodput, so shedding load never looks like serving it.  A request's
+    own `slo_e2e` wins over `default_slo` (see Request.slo_attained)."""
+    total: Dict[str, int] = {}
+    attained: Dict[str, int] = {}
+    for r in requests:
+        total[r.slo_class] = total.get(r.slo_class, 0) + 1
+        if r.slo_attained(default_slo):
+            attained[r.slo_class] = attained.get(r.slo_class, 0) + 1
+    return {c: attained.get(c, 0) / n for c, n in sorted(total.items())}
+
+
 @dataclasses.dataclass
 class PrefillReport:
     n: int

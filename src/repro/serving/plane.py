@@ -108,11 +108,33 @@ class DecodeEngine(abc.ABC):
     dp_ids: List[int]
     epoch: int          # bumped by drain(); invalidates in-flight steps
 
-    def free_kv_tokens(self, dp_id: int) -> Optional[int]:
+    def free_kv_tokens(self, dp_id: int,
+                       tokens: Optional[Sequence[int]] = None
+                       ) -> Optional[int]:
         """Admission headroom of one DP in KV tokens (block-granular on
         paged engines); None when the backend has no physical cache (the
-        cost-model sims — their capacity lives in DecodeDPState)."""
+        cost-model sims — their capacity lives in DecodeDPState).  With
+        `tokens` (a prospective request's prompt ids), page-sharing
+        engines additionally credit the claimable block-aligned prefix
+        already resident in the DP's binder — the same credit the
+        dispatch-side `EngineBackedPrefixIndex` grants, so scheduler and
+        engine agree on capacity under heavy sharing."""
         return None
+
+    def preempt(self, rid: int) -> Optional[Request]:
+        """Page-level preemption: swap ONE resident request out (park
+        its KV + generation state for later re-join) and free its
+        slot/pages.  Returns the request, or None when it is not
+        resident or a step is in flight (the caller retries next
+        cycle).  The caller owns releasing DecodeDPState accounting and
+        re-admitting the victim through the normal join path."""
+        return None
+
+    def pending_waits(self) -> List[Request]:
+        """Requests admitted by the scheduler but still waiting for
+        device-side capacity (deferred joins).  Empty on backends that
+        admit unconditionally (the cost-model sims)."""
+        return []
 
     @abc.abstractmethod
     def admit(self, dp_id: int, req: Request) -> None:

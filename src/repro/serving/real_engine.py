@@ -627,7 +627,8 @@ class _DPDecodeState:
         return any(r is not None for r in self.slots)
 
     # padded plane: a free slot IS the admission token
-    def can_admit(self, need_tokens: int, extra_blocks: int = 0) -> bool:
+    def can_admit(self, need_tokens: int, extra_blocks: int = 0,
+                  shared_blocks: int = 0) -> bool:
         return self.free_slot() is not None
 
 
@@ -651,12 +652,17 @@ class _DPPagedState(_DPDecodeState):
         self.binder: Optional[PagePrefixBinder] = (
             PagePrefixBinder(self.pool) if share_prefix else None)
 
-    def can_admit(self, need_tokens: int, extra_blocks: int = 0) -> bool:
+    def can_admit(self, need_tokens: int, extra_blocks: int = 0,
+                  shared_blocks: int = 0) -> bool:
         need = self.pool.blocks_for(need_tokens)
         if need > self.pool.num_blocks - 1:
             raise ValueError(
                 f"request needs {need} blocks, pool holds only "
                 f"{self.pool.num_blocks - 1} — raise max_len/pool_blocks")
+        # `shared_blocks` prefix pages are already claimed (refs held):
+        # they will be pointed at, never allocated, so only the remainder
+        # must come out of the free store
+        need -= shared_blocks
         if self.binder is not None:
             self.binder.ensure_free(need + extra_blocks)
         return (self.free_slot() is not None
@@ -687,6 +693,7 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         else:
             self._dp = {d: _DPDecodeState(spec) for d in dp_ids}
         self._pending: List[Tuple[int, Request]] = []
+        self._deferred: set = set()   # rids whose join failed can_admit
         self._slot_of: Dict[int, Tuple[int, int]] = {}   # rid -> (dp, slot)
         self._participants: Dict[int, List[Tuple[Request, int]]] = {}
         self._result: Optional[Dict[int, Tuple[Dict, List[int]]]] = None
@@ -700,10 +707,21 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         self._post = loop.post
 
     # -- EnginePlane -----------------------------------------------------
-    def free_kv_tokens(self, dp_id: int) -> Optional[int]:
+    def free_kv_tokens(self, dp_id: int,
+                       tokens: Optional[Sequence[int]] = None
+                       ) -> Optional[int]:
         st = self._dp[dp_id]
         if self.spec.paged:
-            return st.pool.free_count * self.spec.block_size
+            free = st.pool.free_count * self.spec.block_size
+            if tokens and getattr(st, "binder", None) is not None:
+                # credit the claimable block-aligned prefix already
+                # resident in this DP's binder: those pages will be
+                # POINTED AT, not allocated, so they are headroom for
+                # this prompt even though the pool holds them (the same
+                # credit EngineBackedPrefixIndex grants at dispatch)
+                claim, _full = st.binder.peek(tokens)
+                free += st.pool.blocks_for(claim) * self.spec.block_size
+            return free
         free_slots = sum(1 for r in st.slots if r is None)
         return free_slots * self.spec.max_len
 
@@ -711,6 +729,45 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         # buffered: joins are applied between steps (start_step), never
         # while a worker-thread step is in flight
         self._pending.append((dp_id, req))
+
+    def pending_waits(self) -> List[Request]:
+        """Joins deferred by device-side capacity: admitted by the
+        scheduler, but can_admit has refused them at least once.  This is
+        the real plane's overload signal — the preemption driver swaps
+        lower-priority residents out to let these in."""
+        return [r for _, r in self._pending if r.rid in self._deferred]
+
+    def preempt(self, rid: int) -> Optional[Request]:
+        """Page-level preemption: the drain() mechanics at request
+        granularity.  Parks the victim's KV (+ generation state, already
+        on the bus) as a dense batch-1 cache, clears its slot/table row,
+        returns its pages to the pool.  Re-admission goes through the
+        normal join path — a re-parked cache is NOT a PageHandoff, so it
+        re-joins via the dense-paged branch with its generated KV intact.
+        Refused (None) while a worker step is in flight."""
+        if self.busy:
+            return None
+        loc = self._slot_of.get(rid)
+        if loc is None:
+            return None
+        dp_id, slot = loc
+        req = next((r for r in self.running[dp_id] if r.rid == rid), None)
+        if req is None:
+            return None
+        st = self._dp[dp_id]
+        if self.spec.paged:
+            # eager (unjitted), like drain(): swaps are rare and per-slot
+            # jit specialisation would compile mid-overload
+            self.bus.gen(rid).cache = paged_cache_take(
+                self.spec.cfg, st.cache, slot)
+            st.cache = paged_cache_clear_slot(st.cache, slot)
+            st.pool.free(st.held.pop(rid))
+        else:
+            self.bus.gen(rid).cache = cache_take(st.cache, slot)
+        st.slots[slot] = None
+        del self._slot_of[rid]
+        self.running[dp_id].remove(req)
+        return req
 
     def has_work(self) -> bool:
         return bool(self._pending) or super().has_work()
@@ -746,6 +803,7 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
                 by_id[dp_id].release(
                     req.input_len + req.generated,
                     reserve_len=req.input_len + req.output_len)
+                self._deferred.discard(req.rid)
                 self._join_finished.append(req)
                 continue
             # padded: admission token = a free slot; paged: a free slot
@@ -757,15 +815,32 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
             use_binder = (self.spec.paged and st.binder is not None
                           and st.pool.blocks_for(life)
                           < st.pool.num_blocks - 1)
-            if not st.can_admit(life, extra_blocks=1 if use_binder else 0):
+            # CLAIM FIRST: take the refs on the resident prefix before
+            # the admission check so (a) the check credits pages that
+            # will be pointed at rather than allocated — a prefix-heavy
+            # request must not defer behind blocks it doesn't need — and
+            # (b) ensure_free's LRU eviction can never free the pages
+            # between the check and the join
+            claim, shared = 0, []
+            toks = (req.tokens or ())[:req.input_len]
+            if (use_binder and toks
+                    and isinstance(gen.cache, PageHandoff)):
+                claim, shared, _first = st.binder.claim(toks)
+            if not st.can_admit(life, extra_blocks=1 if use_binder else 0,
+                                shared_blocks=len(shared)):
+                if shared:
+                    st.pool.free(shared)     # drop the claim's refs
+                self._deferred.add(req.rid)
                 still.append((dp_id, req))   # retry after this step
                 continue
+            self._deferred.discard(req.rid)
             slot = st.free_slot()
             if st.cache is None:
                 st.cache = (self.spec.paged_cache() if self.spec.paged
                             else self.spec.batch_cache())
             if self.spec.paged and isinstance(gen.cache, PageHandoff):
-                self._join_pages(st, gen, req, slot, use_binder)
+                self._join_pages(st, gen, req, slot, use_binder,
+                                 claim, shared)
             elif self.spec.paged:
                 ids = st.pool.alloc(st.pool.blocks_for(life))
                 st.held[req.rid] = ids
@@ -784,10 +859,12 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         self._pending = still
 
     def _join_pages(self, st: "_DPPagedState", gen: GenState, req: Request,
-                    slot: int, use_binder: bool) -> None:
+                    slot: int, use_binder: bool,
+                    claim: int = 0, shared: Sequence[int] = ()) -> None:
         """Adopt a `PageHandoff` into this DP: prefix blocks already
-        resident (binder claim) are POINTED AT, the rest of the payload
-        is copied into fresh blocks, growth blocks get their stale kv_pos
+        resident (binder claim — taken by the CALLER before the admission
+        check, refs held) are POINTED AT, the rest of the payload is
+        copied into fresh blocks, growth blocks get their stale kv_pos
         cleared.  Then the prompt's pages are published into the DP's own
         prefix cache; binding makes the partial tail block shared, and
         the request's first decode write lands exactly there — so the
@@ -798,11 +875,11 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         toks = (req.tokens or ())[:req.input_len]
         n_all = st.pool.blocks_for(self.spec.lifetime_tokens(req))
         n_payload = st.pool.blocks_for(req.input_len)
+        shared = list(shared)
         if use_binder and toks:
-            claim, shared, _first = st.binder.claim(toks)
+            # hit stats recorded only on a successful join — a deferred
+            # admission must not double-count its retries
             st.binder.record(claim, req.input_len)
-        else:
-            claim, shared = 0, []
         n_shared = len(shared)
         self.blocks_shared += n_shared
         table = list(shared) + st.pool.alloc(n_all - n_shared)
@@ -926,6 +1003,7 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         for dp_id, req in self._pending:
             out.setdefault(dp_id, []).append(req)
         self._pending = []
+        self._deferred.clear()
         self._participants = {}
         self._result = None
         return out

@@ -38,6 +38,24 @@ decode scheduler reports a stalled instance (dispatched work but no step
 completion within its watchdog budget), the instance is drained, its KV
 accounting is released, and the stranded requests are re-placed on the
 healthy instances through the scheduler's load-aware allocator.
+
+SLO-aware overload control (both opt-in, see ServingConfig):
+
+  admission   a `FlowController` gates arrivals: while the decode pool is
+              saturated (every DP at its batch or KV budget) new arrivals
+              are throttled — their arrival event re-enters the heap
+              after a backoff — and, past their priority class's horizon,
+              rejected outright (phase REJECTED, counted as settled).
+  preemption  page-level swap-out: when lower-priority residents crowd
+              out more urgent work (a deferred engine join on the real
+              plane, a unit over its KV budget on the sim plane), victims
+              chosen by `select_victims` are preempted — their KV parks
+              on the handoff bus with generation state intact — their
+              DPState accounting is released, and they re-enter through
+              the scheduler's re-dispatch allocator exactly like
+              watchdog-drained work.  Strictly-lower-priority-only
+              eviction keeps the policy cycle-free; `max_preemptions`
+              bounds per-request thrash.
 """
 from __future__ import annotations
 
@@ -47,6 +65,8 @@ import queue
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.core.decode_alloc import kv_footprint, select_victims
+from repro.core.flow_control import FlowAction, FlowController
 from repro.core.types import Request, RequestPhase
 from repro.serving.plane import ASYNC, DecodeEngine, PrefillEngine
 
@@ -129,6 +149,10 @@ class ClusterRuntime:
         transfer_time=None,            # callable(Request) -> seconds
         snapshot_every: int = 0,
         realtime: bool = False,
+        flow: Optional[FlowController] = None,
+        preemption: bool = False,
+        max_preemptions: int = 2,
+        readmit_frac: float = 0.7,
     ):
         if prefill_sched is None and decode_sched is None:
             raise ValueError("runtime needs at least one plane")
@@ -150,6 +174,14 @@ class ClusterRuntime:
         self.batch_timeline: List[List[int]] = []
         self.redispatched: List[Request] = []
         self._steps = 0
+        # SLO-aware overload control (opt-in)
+        self.flow = flow
+        self.preemption = preemption
+        self.max_preemptions = max_preemptions
+        self.readmit_frac = readmit_frac
+        self.preempted: List[Request] = []      # every swap-out event
+        self.rejected: List[Request] = []       # flow-control rejections
+        self._parked: List[Request] = []        # swapped out, awaiting room
 
     # -- helpers -----------------------------------------------------------
 
@@ -223,6 +255,119 @@ class ClusterRuntime:
             return self.dsched.place_redispatch(orphans, now)
         return None
 
+    def _decode_saturated(self) -> bool:
+        """Admission-gate predicate: every decode DP is at its batch cap
+        or KV budget — there is nowhere to put new work."""
+        dps = self.state.decode_dps
+        if not dps:
+            return False
+        return all(d.batch >= d.max_batch or d.kv_occupancy >= d.kv_budget
+                   for d in dps)
+
+    def _preempt_pressure(self, now: float):
+        """SLO-aware preemption: free capacity for more urgent waiters by
+        swapping strictly-lower-priority residents out.
+
+        Two pressure signals, one victim policy (`select_victims`):
+          real plane   `pending_waits()` — a scheduler-admitted join the
+                       engine has deferred for device-side capacity; the
+                       waiter's own priority bounds who may be evicted.
+          sim plane    a DP over its KV budget (the cost-model engines
+                       admit unconditionally); the most urgent resident
+                       class bounds eviction.
+        Victims are released from DPState accounting (exactly the
+        watchdog-drain bookkeeping) and PARKED — the swap-to-host model:
+        their KV leaves the device (on the real plane it rides the
+        handoff bus and re-joins dense with generation state intact) and
+        `_readmit_parked` returns them through the scheduler's
+        re-dispatch allocator once a DP can hold them within budget."""
+        if self.dsched is None or not self.decode:
+            return None
+        by_id = {d.dp_id: d for d in self.state.decode_dps}
+        bs = getattr(self.state, "block_size", 0) or 0
+        victims: List[Request] = []
+        for inst in self.decode:
+            for waiter in sorted(inst.pending_waits(),
+                                 key=lambda r: (r.priority, r.arrival_time)):
+                dp_id = waiter.assigned_dp
+                if dp_id is None:
+                    continue
+                need = kv_footprint(waiter, bs)
+                free = inst.free_kv_tokens(dp_id, tokens=waiter.tokens)
+                if free is not None:
+                    need -= free
+                if need <= 0:
+                    continue        # capacity already there; join retries
+                residents = [r for r in inst.running.get(dp_id, [])
+                             if r.preemptions < self.max_preemptions]
+                for v in select_victims(residents, need, bs,
+                                        max_priority=waiter.priority):
+                    got = inst.preempt(v.rid)
+                    if got is None:
+                        break       # step in flight — retry next event
+                    victims.append(got)
+            for dp_id in inst.dp_ids:
+                st = by_id[dp_id]
+                over = st.kv_occupancy - st.kv_budget
+                if over <= 0:
+                    continue
+                residents = [r for r in inst.running.get(dp_id, [])
+                             if r.preemptions < self.max_preemptions]
+                if not residents:
+                    continue
+                top = min(r.priority for r in residents)
+                for v in select_victims(residents, over, bs,
+                                        max_priority=top):
+                    got = inst.preempt(v.rid)
+                    if got is None:
+                        break
+                    victims.append(got)
+        if not victims:
+            return
+        for r in victims:
+            st = by_id[r.assigned_dp]
+            st.release(r.input_len + r.generated,
+                       reserve_len=r.input_len + r.output_len)
+            r.assigned_dp = None
+            r.preemptions += 1
+            r.phase = RequestPhase.PREEMPTED
+        self.preempted.extend(victims)
+        self._parked.extend(victims)
+
+    def _readmit_parked(self, now: float):
+        """Re-admit parked (swapped-out) requests once pressure drops: a
+        parked request re-enters — most urgent first — when some DP can
+        hold its whole KV footprint within `readmit_frac` of its budget.
+        The fraction is hysteresis: re-admitting the moment occupancy
+        dips under 100% puts the victim straight back into the pressure
+        that evicted it (swap thrash); waiting for real headroom lets
+        the spike pass.  Placement goes through the scheduler's
+        re-dispatch allocator, i.e. the normal join path."""
+        if not self._parked:
+            return None
+        bs = getattr(self.state, "block_size", 0) or 0
+        self._parked.sort(key=lambda r: (r.priority, r.arrival_time))
+        ready: List[Request] = []
+        kept: List[Request] = []
+        for r in self._parked:
+            foot = kv_footprint(r, bs)
+            if any(d.batch < d.max_batch
+                   and d.kv_occupancy + foot <= d.kv_budget
+                   * self.readmit_frac
+                   for d in self.state.decode_dps):
+                ready.append(r)
+            else:
+                kept.append(r)
+        if not ready:
+            return None
+        self._parked = kept
+        placements = self.dsched.place_redispatch(ready, now)
+        if placements:
+            for reqs in placements.values():
+                for r in reqs:
+                    r.phase = RequestPhase.DECODING
+        return placements
+
     def _all_settled(self, template: Sequence[Request]) -> bool:
         return all(r.finish_time is not None
                    or r.phase == RequestPhase.REJECTED for r in template)
@@ -273,10 +418,20 @@ class ClusterRuntime:
             if now > horizon:
                 break
             if kind == "arrival":
-                if self.psched is not None:
-                    self.psched.on_arrival(payload, now)
+                req: Request = payload
+                act = FlowAction.ADMIT
+                if self.flow is not None and self.decode:
+                    act = self.flow.gate(req, self._decode_saturated())
+                if act == FlowAction.THROTTLE:
+                    ev.push(now + self.flow.backoff(req.wait_cycles),
+                            "arrival", req)
+                elif act == FlowAction.REJECT:
+                    req.phase = RequestPhase.REJECTED
+                    self.rejected.append(req)
+                elif self.psched is not None:
+                    self.psched.on_arrival(req, now)
                 else:
-                    self._handoff(payload, now)
+                    self._handoff(req, now)
             elif kind == "pass_end":
                 inst: PrefillEngine = payload
                 if self.realtime:
@@ -332,6 +487,9 @@ class ClusterRuntime:
             if self.dsched is not None:
                 self._place(self.dsched.poll(now), now)
                 self._place(self._redispatch_stalled(now), now)
+                if self.preemption:
+                    self._place(self._readmit_parked(now), now)
+                    self._preempt_pressure(now)
                 for dinst in self.decode:
                     dur = dinst.start_step(self.state.decode_dps, now)
                     if dur is ASYNC:

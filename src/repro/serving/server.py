@@ -31,6 +31,7 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from repro.config.base import ModelConfig, ServingConfig
+from repro.core.flow_control import FlowController
 from repro.core.types import Request
 from repro.serving.cluster import (
     build_decode_scheduler, build_prefill_scheduler, build_state,
@@ -136,12 +137,16 @@ class RealSBSServer:
                 i, [d.dp_id for d in self.state.decode_dps_of(i)],
                 self.spec, self.bus, share_prefix=self.prefix_cache)
             for i in range(scfg.num_decode_instances)]
+        flow = (FlowController(n_limit=scfg.n_limit,
+                               backoff_base=scfg.flow_backoff)
+                if scfg.flow_control else None)
         self.runtime = ClusterRuntime(
             self.state, prefill_sched=self.sched,
             prefill_instances=self.engines,
             decode_sched=self.dsched, decode_instances=self.decode_engines,
             transfer_time=lambda r: scfg.l_net,     # P/D transfer latency
-            realtime=True)
+            realtime=True,
+            flow=flow, preemption=scfg.preemption)
 
     def serve(self, requests: Sequence[Request], timeout: float = 120.0
               ) -> List[Generation]:

@@ -13,9 +13,23 @@
               tenant's system prompt; tenants are Zipf-popular, so a few
               hot prompts dominate (the prefix-cache / page-sharing
               scenario — hit rate tracks Zipf mass × prefix fraction)
+- overload_spike: mixed SLO classes under a hard flash crowd (5× peak):
+              interactive chat, standard traffic and batch jobs share the
+              pool, so overload control has real choices to make (the
+              preemption / flow-control / goodput scenario)
+- diurnal:    the same class mix under a slow sinusoidal rate swell —
+              a compressed day: the pool saturates near the crest and
+              recovers in the trough (tests that throttled work admits
+              again and preempted work completes)
 
 Arrivals are Poisson (the M in the paper's M/D/S analysis); bursty
-workloads modulate the rate between a high and a low state.
+workloads modulate the rate between a high and a low state; diurnal
+workloads thin a peak-rate Poisson stream against a sinusoid.
+
+Priority classes: `class_mix` assigns each request an SLO class
+(core.types.SLO_CLASSES — name, priority, e2e deadline) with the given
+probabilities.  An empty mix leaves every request in the default class,
+which keeps the legacy scenarios byte-identical.
 """
 from __future__ import annotations
 
@@ -23,9 +37,9 @@ import bisect
 import dataclasses
 import math
 import random
-from typing import Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional
 
-from repro.core.types import Request
+from repro.core.types import Request, SLO_CLASSES
 
 
 @dataclasses.dataclass
@@ -45,6 +59,12 @@ class WorkloadSpec:
     n_tenants: int = 0
     tenant_zipf: float = 1.2
     tenant_prefix_len: int = 384
+    # SLO class mix: class name -> probability (empty = all default class)
+    class_mix: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # sinusoidal rate modulation (diurnal): peak rate = qps, trough rate =
+    # qps * diurnal_floor, one full cycle per diurnal_period seconds
+    diurnal_period: float = 0.0
+    diurnal_floor: float = 0.1
 
 
 SHORT = WorkloadSpec("short", 16, 3000, 1000.0)
@@ -56,10 +76,19 @@ HEAVY_TAIL = WorkloadSpec("heavy_tail", 64, 131072, 2500.0, sigma=1.6)
 SHARED_PREFIX = WorkloadSpec("shared_prefix", 256, 3000, 1000.0,
                              n_tenants=24, tenant_zipf=1.2,
                              tenant_prefix_len=384)
+_CLASS_MIX = {"interactive": 0.35, "standard": 0.45, "batch": 0.20}
+OVERLOAD_SPIKE = WorkloadSpec("overload_spike", 16, 3000, 1000.0,
+                              out_mean=300,
+                              burst_factor=5.0, burst_duty=0.15,
+                              burst_period=4.0, class_mix=_CLASS_MIX)
+DIURNAL = WorkloadSpec("diurnal", 16, 3000, 1000.0, out_mean=300,
+                       diurnal_period=20.0, diurnal_floor=0.15,
+                       class_mix=_CLASS_MIX)
 
 SPECS = {"short": SHORT, "long": LONG, "decode": DECODE,
          "bursty": BURSTY, "heavy_tail": HEAVY_TAIL,
-         "shared_prefix": SHARED_PREFIX}
+         "shared_prefix": SHARED_PREFIX,
+         "overload_spike": OVERLOAD_SPIKE, "diurnal": DIURNAL}
 
 
 def _zipf_cdf(n: int, s: float) -> List[float]:
@@ -101,7 +130,23 @@ def arrival_times(spec: WorkloadSpec, qps: float, duration: float,
     """Arrival process: plain Poisson, or a two-state Markov-modulated
     Poisson process when burst_factor > 1.  The long-run average rate is
     `qps` in both cases: the peak state runs at burst_factor×qps for
-    burst_duty of each period, the quiet state absorbs the remainder."""
+    burst_duty of each period, the quiet state absorbs the remainder.
+
+    Diurnal specs (`diurnal_period` > 0) thin a PEAK-rate (`qps`) Poisson
+    stream against a raised sinusoid instead: rate(t) swings between
+    qps·diurnal_floor (trough) and qps (crest) once per period."""
+    if spec.diurnal_period > 0.0:
+        per, fl = spec.diurnal_period, spec.diurnal_floor
+        t = 0.0
+        while True:
+            t += rng.expovariate(qps)
+            if t >= duration:
+                return
+            envelope = fl + (1.0 - fl) * 0.5 * (
+                1.0 - math.cos(2.0 * math.pi * t / per))
+            if rng.random() < envelope:
+                yield t
+        return
     if spec.burst_factor <= 1.0:
         t = 0.0
         while True:
@@ -121,7 +166,11 @@ def arrival_times(spec: WorkloadSpec, qps: float, duration: float,
     t = 0.0
     while t < duration:
         cycle0 = math.floor(t / period) * period
-        in_burst = (t - cycle0) < duty * period
+        # the epsilon guards a float livelock: when duty*period is not
+        # exactly representable (e.g. 0.15×4.0), a t clamped to the burst
+        # end can still test < the boundary, making seg_end == t — and
+        # then no draw ever advances the clock
+        in_burst = t < cycle0 + duty * period - 1e-12
         seg_end = cycle0 + (duty * period if in_burst else period)
         rate = hi if in_burst else lo
         if rate <= 0.0:
@@ -166,6 +215,15 @@ def generate(
             tuple(rng.randrange(vocab)
                   for _ in range(spec.tenant_prefix_len))
             for _ in range(spec.n_tenants)]
+    class_names: List[str] = []
+    class_cdf: List[float] = []
+    if spec.class_mix:
+        tot = sum(spec.class_mix.values())
+        acc = 0.0
+        for name, p in spec.class_mix.items():
+            acc += p / tot
+            class_names.append(name)
+            class_cdf.append(acc)
     for t in arrival_times(spec, qps, duration, rng):
         L = sample_length(spec, rng)
         tokens = None
@@ -182,9 +240,16 @@ def generate(
                 tokens = (pre + body)[:L]
             else:
                 tokens = tuple(rng.randrange(vocab) for _ in range(L))
+        kw = {}
+        if class_names:
+            i = min(bisect.bisect_left(class_cdf, rng.random()),
+                    len(class_names) - 1)
+            cls = SLO_CLASSES[class_names[i]]
+            kw = dict(priority=cls.priority, slo_e2e=cls.slo_e2e,
+                      slo_class=cls.name)
         reqs.append(Request(
             rid=rid, arrival_time=t, input_len=L,
-            output_len=sample_output_len(spec, rng), tokens=tokens))
+            output_len=sample_output_len(spec, rng), tokens=tokens, **kw))
         rid += 1
     return reqs
 

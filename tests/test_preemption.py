@@ -1,0 +1,290 @@
+"""SLO-aware overload control: page-level preemption, priority classes,
+and flow-control admission.
+
+  * property: a paged resident that is preempted mid-generation
+    (`paged_cache_take`), has its pages freed, and re-joins through the
+    dense-paged join path must continue generating EXACTLY the tokens of
+    the seed serial decode — swap-out is invisible to the sampled stream
+  * engine: `RealDecodeEngine.preempt` parks a dense batch-1 cache on
+    the handoff bus, returns the victim's pages to the pool
+    (conservation), and the victim re-admits through the normal join
+  * `free_kv_tokens` credits the binder-claimable shared prefix — the
+    admission under-counting regression (shared pages are POINTED AT,
+    never allocated, so they are headroom for a matching prompt)
+  * victim policy: `select_victims` only evicts strictly-less-urgent
+    residents, least progress first, and refuses partial coverage
+  * sim plane: `ClusterRuntime` preemption under a priority-mixed
+    overload parks and re-admits batch work — nobody starves
+  * `FlowController`: per-request outcome stats (a request throttled N
+    times then admitted counts ONCE), priority-tiered reject horizon
+"""
+import random
+
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from test_real_plane import (  # noqa: F401  (tiny_dense is a fixture)
+    BLOCK, MAX_LEN, NBT, _chunked_prefill, _publish_handoffs,
+    _serial_decode, tiny_dense,
+)
+
+from repro.config import ServingConfig, get_arch
+from repro.core.decode_alloc import kv_footprint, select_victims
+from repro.core.flow_control import FlowAction, FlowController
+from repro.core.types import DecodeDPState, Request
+from repro.models import (
+    init_paged_cache, paged_cache_clear_slot, paged_cache_join,
+    paged_cache_take, paged_decode_step,
+)
+from repro.serving.e2e import PDClusterSim
+from repro.serving.kv_pool import BlockPool, pad_block_table
+from repro.serving.real_engine import (
+    EngineSpec, KVHandoffBus, RealDecodeEngine,
+)
+
+N_TOTAL = 6
+
+
+# ---------------------------------------------------------------------------
+# Preempt → re-admit is token-exact (cache surgery level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paged
+@given(plen=st.sampled_from([16, 32, 48]),
+       k_pre=st.integers(0, 3),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=6, deadline=None)
+def test_preempt_rejoin_token_exact(tiny_dense, plen, k_pre, seed):
+    """Join paged → decode k steps → preempt (take + clear + free pages)
+    → re-join the parked dense cache into a DIFFERENT slot with freshly
+    allocated pages → finish.  The full stream must equal the seed
+    serial decode of the unpreempted request."""
+    cfg, params = tiny_dense
+    rng = random.Random(seed)
+    ids = [rng.randrange(cfg.vocab_size) for _ in range(plen)]
+    t0, cache = _chunked_prefill(cfg, params, ids)
+    serial, _ = _serial_decode(cfg, params, t0, cache, N_TOTAL)
+
+    pool = BlockPool(12, BLOCK)
+    pc = init_paged_cache(cfg, 3, 12, MAX_LEN, BLOCK)
+    need = pool.blocks_for(plen + N_TOTAL)
+    blocks = pool.alloc(need)
+    pc = paged_cache_join(
+        cfg, pc, cache, 1,
+        jnp.asarray(pad_block_table(blocks, NBT), jnp.int32))
+    toks = [t0]
+    nxt = [0, t0, 0]
+    for _ in range(k_pre):
+        lg, pc = paged_decode_step(
+            cfg, params, jnp.asarray([[t] for t in nxt], jnp.int32), pc)
+        t = int(jnp.argmax(lg[1]))
+        toks.append(t)
+        nxt[1] = t
+
+    # page-level preemption: park as dense batch-1, give the pages back
+    taken = paged_cache_take(cfg, pc, 1)
+    pc = paged_cache_clear_slot(pc, 1)
+    pool.free(blocks)
+    pool.check()
+    assert int(taken["cur"][0]) == plen + k_pre
+
+    # re-admission: fresh pages, different slot, same join path
+    blocks2 = pool.alloc(need)
+    pc = paged_cache_join(
+        cfg, pc, taken, 2,
+        jnp.asarray(pad_block_table(blocks2, NBT), jnp.int32))
+    nxt2 = [0, 0, toks[-1]]
+    while len(toks) < N_TOTAL:
+        lg, pc = paged_decode_step(
+            cfg, params, jnp.asarray([[t] for t in nxt2], jnp.int32), pc)
+        t = int(jnp.argmax(lg[2]))
+        toks.append(t)
+        nxt2[2] = t
+    assert toks == serial
+    pool.free(blocks2)
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level preemption: parked state + pool conservation + re-admit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paged
+def test_engine_preempt_frees_pages_and_readmits(tiny_dense):
+    cfg, params = tiny_dense
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN, max_batch=4, max_new=4,
+                      block_size=BLOCK)
+    bus = KVHandoffBus()
+    eng = RealDecodeEngine(0, [0], spec, bus)
+    rng = random.Random(7)
+    reqs = [Request(rid=i, arrival_time=0.0, input_len=24, output_len=4,
+                    tokens=tuple(rng.randrange(cfg.vocab_size)
+                                 for _ in range(24)),
+                    priority=2 - 2 * i)          # rid0 batch, rid1 urgent
+            for i in range(2)]
+    _publish_handoffs(cfg, params, bus, reqs)
+    dps = DecodeDPState(dp_id=0, instance_id=0, block_size=BLOCK)
+    for r in reqs:
+        eng.admit(0, r)
+    eng._apply_joins(0.0, [dps])
+    dp = eng._dp[0]
+    per_req = dp.pool.blocks_for(24 + 4)
+    free_joined = dp.pool.free_count
+
+    # refused while a worker step is in flight
+    eng.busy = True
+    assert eng.preempt(0) is None
+    eng.busy = False
+
+    victim = eng.preempt(0)
+    assert victim is reqs[0]
+    assert dp.pool.free_count == free_joined + per_req     # pages returned
+    assert 0 not in eng._slot_of
+    assert all(r.rid != 0 for r in eng.running[0])
+    parked = bus.gen(0).cache
+    assert isinstance(parked, dict) and "kv_pos" in parked  # dense batch-1
+    assert parked["kv_pos"].shape == (1, MAX_LEN)
+    assert int(parked["cur"][0]) == 24                      # prefill KV intact
+    dp.pool.check()
+
+    # re-admission rides the normal deferred-join path
+    eng.admit(0, reqs[0])
+    eng._apply_joins(0.0, [dps])
+    assert 0 in eng._slot_of
+    assert dp.pool.free_count == free_joined
+
+    # full conservation once both residents leave
+    for r in reqs:
+        eng.preempt(r.rid)
+    assert dp.pool.free_count == free_joined + 2 * per_req
+    dp.pool.check()
+
+
+@pytest.mark.paged
+def test_free_kv_tokens_credits_shared_prefix(tiny_dense):
+    """The admission under-counting fix: a prompt whose block-aligned
+    prefix is resident in the DP's binder must be credited those pages —
+    they will be pointed at, never allocated."""
+    cfg, params = tiny_dense
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN, max_batch=4, max_new=4,
+                      block_size=BLOCK)
+    eng = RealDecodeEngine(0, [0], spec, KVHandoffBus(), share_prefix=True)
+    dp = eng._dp[0]
+    rng = random.Random(11)
+    prefix = tuple(rng.randrange(cfg.vocab_size) for _ in range(2 * BLOCK))
+    blocks = dp.pool.alloc(2)
+    dp.binder.insert(prefix, blocks, first_token=None)
+    dp.pool.free(blocks)            # engine refs dropped; binder's remain
+    base = dp.pool.free_count * BLOCK
+
+    prompt = list(prefix) + [rng.randrange(cfg.vocab_size) for _ in range(8)]
+    assert eng.free_kv_tokens(0) == base
+    assert eng.free_kv_tokens(0, tokens=prompt) == base + 2 * BLOCK
+    # a prompt with no resident prefix gets no credit
+    cold = [rng.randrange(cfg.vocab_size) for _ in range(2 * BLOCK)]
+    assert eng.free_kv_tokens(0, tokens=cold) == base
+
+
+# ---------------------------------------------------------------------------
+# Victim selection policy
+# ---------------------------------------------------------------------------
+
+def _resident(rid, prio, gen, arr=0.0):
+    return Request(rid=rid, arrival_time=arr, input_len=32, output_len=16,
+                   priority=prio, generated=gen)
+
+
+def test_select_victims_strict_priority_least_progress():
+    residents = [_resident(0, 0, 4), _resident(1, 2, 2),
+                 _resident(2, 2, 10), _resident(3, 1, 1)]
+    v = select_victims(residents, 16, block_size=BLOCK, max_priority=1)
+    assert v and all(r.priority > 1 for r in v)      # strictly less urgent
+    assert v[0].rid == 1                             # least progress first
+    assert sum(kv_footprint(r, BLOCK) for r in v) >= 16
+
+
+def test_select_victims_refuses_partial_coverage():
+    residents = [_resident(1, 2, 2), _resident(2, 2, 10)]
+    assert select_victims(residents, 10_000, block_size=BLOCK,
+                          max_priority=0) == []
+    # and nothing is eligible when every resident is at least as urgent
+    assert select_victims([_resident(0, 0, 4)], 16, block_size=BLOCK,
+                          max_priority=1) == []
+
+
+# ---------------------------------------------------------------------------
+# Sim-plane preemption: park + re-admit, starvation guard
+# ---------------------------------------------------------------------------
+
+def test_sim_preemption_parks_readmits_nobody_starves():
+    """A priority-mixed overload on a tight decode pool: urgent arrivals
+    force batch residents out; every victim must be re-admitted and run
+    to completion (no starvation), and the pool must drain clean."""
+    cfg = get_arch("deepseek-7b", reduced=True)
+    scfg = ServingConfig(num_prefill_instances=1, prefill_dp_per_instance=2,
+                         num_decode_instances=1, decode_dp_per_instance=1,
+                         chunk_size=2048, t_default=0.05,
+                         max_batch_per_dp=8, kv_budget_tokens=2_000,
+                         preemption=True)
+    hogs = [Request(rid=i, arrival_time=0.01 * i, input_len=400,
+                    output_len=100, priority=2, slo_class="batch")
+            for i in range(4)]
+    urgent = [Request(rid=10 + i, arrival_time=0.1 + 0.05 * i, input_len=300,
+                      output_len=4, priority=0, slo_class="interactive")
+              for i in range(2)]
+    reqs = hogs + urgent
+    sim = PDClusterSim(cfg, scfg, scheduler="sbs-la")
+    rep = sim.run(reqs, 10.0)
+
+    assert rep.n_finished == len(reqs)
+    for r in reqs:
+        assert r.finish_time is not None, f"rid {r.rid} starved"
+        assert r.generated == r.output_len
+    assert sim.runtime.preempted, "tight pool + urgent arrivals must preempt"
+    assert all(r.priority > 0 for r in sim.runtime.preempted)
+    assert not sim.runtime._parked                   # everyone re-admitted
+    for dp in sim.state.decode_dps:                  # pool drained clean
+        assert dp.kv_occupancy == 0
+        assert dp.batch == 0
+
+
+# ---------------------------------------------------------------------------
+# Flow-control stats: per-request outcomes, tiered reject horizon
+# ---------------------------------------------------------------------------
+
+def test_flow_stats_count_outcomes_not_cycles():
+    fc = FlowController(n_limit=2, reject_after=3, backoff_base=0.01)
+    r = Request(rid=1, arrival_time=0.0, input_len=8, output_len=1,
+                priority=0)
+    for _ in range(4):
+        assert fc.gate(r, saturated=True) == FlowAction.THROTTLE
+    assert fc.gate(r, saturated=False) == FlowAction.ADMIT
+    s = fc.stats
+    # throttled-then-admitted migrates buckets: ONE admitted, not 4+1
+    assert (s.admitted, s.throttled, s.rejected) == (1, 0, 0)
+    assert r.wait_cycles == 0        # admission resets the throttle clock
+
+
+def test_flow_reject_horizon_tiered_by_priority():
+    fc = FlowController(n_limit=2, reject_after=3, backoff_base=0.01)
+    batch = Request(rid=2, arrival_time=0.0, input_len=8, output_len=1,
+                    priority=2)
+    acts = [fc.gate(batch, saturated=True) for _ in range(3)]
+    assert acts == [FlowAction.THROTTLE, FlowAction.THROTTLE,
+                    FlowAction.REJECT]               # horizon = n_limit × 1
+    urgent = Request(rid=3, arrival_time=0.0, input_len=8, output_len=1,
+                     priority=0)
+    acts = [fc.gate(urgent, saturated=True) for _ in range(7)]
+    assert acts[:6] == [FlowAction.THROTTLE] * 6     # n_limit × reject_after
+    assert acts[6] == FlowAction.REJECT
+    s = fc.stats
+    assert (s.admitted, s.throttled, s.rejected) == (0, 0, 2)
+
+
+def test_flow_backoff_doubles_and_caps():
+    fc = FlowController(n_limit=2, backoff_base=0.05)
+    assert fc.backoff(2) == pytest.approx(0.05)      # within grace: base
+    assert fc.backoff(3) == pytest.approx(0.10)
+    assert fc.backoff(4) == pytest.approx(0.20)
+    assert fc.backoff(50) == pytest.approx(0.05 * 32)   # capped
