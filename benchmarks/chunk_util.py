@@ -1,11 +1,58 @@
 """Table 1 — Prefill chunk utilization and max sustainable QPS, batch
-scheduling Off vs On, at a fixed mean-TTFT constraint."""
+scheduling Off vs On, at a fixed mean-TTFT constraint — plus the
+length-bucketed batch-formation A/B: padding FLOPs wasted per dispatched
+batch, bucketed vs unbucketed, on heavy-tail prompt lengths."""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import find_peak_qps, prefill_serving_cfg, run_prefill
-from repro.serving.workload import SHORT
+from benchmarks.common import (
+    ARCH, find_peak_qps, prefill_serving_cfg, run_prefill,
+)
+from repro.serving.workload import HEAVY_TAIL, SHORT
+
+
+def _bucketed_padding(report) -> List[str]:
+    """BucketServe-style formation inside the SBS window: one padded-
+    length class dispatches per cycle instead of the whole buffer, so
+    co-batched prompts pad to near-equal lengths.  Heavy-tail lengths
+    (lognormal sigma=1.6) make the unbucketed pad-to-batch-max waste
+    large; the column prices it in prefill FLOPs per dispatched batch."""
+    from repro.config import get_arch
+    from repro.serving.cluster import PrefillClusterSim
+    from repro.serving.costmodel import CostModel
+    from repro.serving.workload import generate
+
+    rows: List[str] = []
+    cfg = get_arch(ARCH)
+    cost = CostModel(cfg)
+    qps, dur = 25.0, 12.0
+    report("\n## Bucketed batch formation (sbs, heavy_tail, "
+           f"qps={qps:.0f}): padding FLOPs wasted per batch")
+    report(f"{'formation':>12} {'batches':>8} {'pad tok/batch':>14} "
+           f"{'pad TFLOPs/batch':>17} {'TTFT':>8}")
+    out = {}
+    for label, bs in (("unbucketed", 0), ("bucketed", 512)):
+        scfg = prefill_serving_cfg(chunk=3072, bucket_size=bs)
+        reqs = generate(HEAVY_TAIL, qps=qps, duration=dur, seed=9)
+        sim = PrefillClusterSim(cfg, scfg, scheduler="sbs")
+        rep = sim.run(reqs, dur)
+        batches = max(sim.sched.cycles, 1)
+        pad_tok = sim.sched.padding_tokens_wasted / batches
+        pad_tf = cost.prefill_flops(
+            sim.sched.padding_tokens_wasted) / batches / 1e12
+        out[label] = {"pad_tok": pad_tok, "pad_tf": pad_tf,
+                      "ttft": rep.ttft_mean}
+        report(f"{label:>12} {batches:>8d} {pad_tok:>14.0f} "
+               f"{pad_tf:>17.1f} {rep.ttft_mean*1000:>6.0f}ms")
+        rows.append(f"chunk_util/bucketed/{label},"
+                    f"pad_tok_per_batch={pad_tok:.0f},"
+                    f"pad_tflops_per_batch={pad_tf:.1f}")
+    if out["unbucketed"]["pad_tok"] > 0:
+        d = 1 - out["bucketed"]["pad_tok"] / out["unbucketed"]["pad_tok"]
+        report(f"{'':>12} bucketed padding waste vs unbucketed: "
+               f"{-d*100:+.1f}%")
+    return rows
 
 
 def main(report) -> List[str]:
@@ -30,4 +77,5 @@ def main(report) -> List[str]:
                    f"{dq:>7} {du:>7}")
             rows.append(f"chunk_util/{chunk}/{name},{peak:.0f},"
                         f"util={rep.chunk_util*100:.1f}%")
+    rows.extend(_bucketed_padding(report))
     return rows

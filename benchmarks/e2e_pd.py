@@ -16,7 +16,7 @@ from typing import Dict, List, Optional
 
 from repro.config import ServingConfig, get_arch
 from repro.serving.e2e import PDClusterSim
-from repro.serving.workload import WorkloadSpec, generate
+from repro.serving.workload import DECODE_BURST, WorkloadSpec, generate
 
 from benchmarks.common import ARCH
 
@@ -36,6 +36,11 @@ SCENARIOS = (
     ("bursty", BURSTY, (40, 70)),
     ("heavy_tail", HEAVY, (20, 35)),
     ("shared_prefix", SHARED, (40, 70)),
+    # decode-heavy MMPP bursts (serving.workload.DECODE_BURST): long
+    # generations keep the decode pool saturated while prompt bursts
+    # arrive on top — the ITL-sensitive regime the unified mixed-batch
+    # plane targets (see _mixed_batch for the piggyback A/B)
+    ("decode_burst", DECODE_BURST, (10, 18)),
 )
 
 JSON_PAYLOAD: Optional[Dict] = None
@@ -142,6 +147,82 @@ def _overload_control(report, quick: bool) -> Dict:
     return out
 
 
+def _mixed_reqs(seed: int = 0) -> List:
+    """Loaded-pool mixed-batch traffic: 40 long-output chat residents
+    keep every decode DP populated, then periodic bursts of long prompts
+    land on top.  Each burst's prefill MUST coexist with live decode
+    rows (no empty DP absorbs it) — the regime where a disjoint
+    prefill/decode loop bubbles the resident rows' ITL and piggybacking
+    does not.  Deliberately hand-built: a Poisson stream at sustainable
+    qps barely prefills between decode steps, so stall events stay below
+    the 1% that an ITL p99 can see."""
+    import random
+
+    from repro.core.types import Request
+
+    rng = random.Random(seed)
+    reqs: List[Request] = []
+    rid = 0
+    for i in range(30):           # residents: short prompt, long output
+        reqs.append(Request(
+            rid=rid, arrival_time=i * 0.005,
+            input_len=rng.randrange(200, 800),
+            output_len=rng.randrange(300, 600)))
+        rid += 1
+    for b in range(4):            # bursts: long prompts, short output
+        t0 = 0.8 + b * 0.7
+        for i in range(12):
+            reqs.append(Request(
+                rid=rid, arrival_time=t0 + i * 0.002,
+                input_len=rng.randrange(2000, 6000),
+                output_len=rng.randrange(20, 60)))
+            rid += 1
+    return reqs
+
+
+def _mixed_batch(report, quick: bool) -> Dict:
+    """Unified mixed-batch plane A/B (sbs-la): the SAME unified
+    deployment with chunked prefill piggybacked into the decode steps vs
+    the disjoint (prefill-prioritizing) ablation where every prefill
+    chunk stalls the resident decode rows.  The pool is deliberately
+    loaded (see `_mixed_reqs`) so burst prefill always lands on DPs with
+    live decodes — the headline is ITL p99 at equal-or-higher
+    throughput.
+
+    Runs on the 7B arch, not ARCH: the mixed chunk must be small
+    relative to the decode step time for piggybacking to pay (a chunk
+    whose prefill dwarfs the step inflates EVERY resident's ITL to the
+    mixed-step time — the Sarathi chunk-sizing tradeoff), and 2048 @ 7B
+    sits in the paying regime while 671B would need a per-arch chunk
+    sweep that belongs in chunk_util, not here."""
+    cfg = get_arch("deepseek-7b")
+    # a 4-DP pool: small enough that load-aware placement cannot absorb
+    # a burst's prefill on empty DPs (which would make both legs
+    # identical — stalls need grants and rows on the SAME DP)
+    scfg = ServingConfig(num_prefill_instances=1, num_decode_instances=1,
+                         decode_dp_per_instance=4,
+                         mixed_batch=True, mixed_chunk=2048,
+                         bucket_size=512)
+    duration = 4.0
+    out: Dict = {}
+    report("\n### unified mixed-batch plane (loaded decode pool, sbs-la)")
+    for label, piggy in (("piggyback", True), ("disjoint", False)):
+        reqs = _mixed_reqs(seed=0)
+        sim = PDClusterSim(
+            cfg, dataclasses.replace(scfg, mixed_piggyback=piggy),
+            scheduler="sbs-la")
+        rep = sim.run(reqs, duration)
+        row = rep.json_row()
+        row["forced_grants"] = sum(i.forced_grants for i in sim.decode)
+        row["prefill_tokens"] = sum(i.prefill_tokens for i in sim.decode)
+        out[label] = row
+        report(f"{label:>12}  {rep.row()}")
+    if out["disjoint"]["itl_p99"] > 0:
+        gain = 1 - out["piggyback"]["itl_p99"] / out["disjoint"]["itl_p99"]
+        report(f"{'':>12}  piggyback ITL p99 vs disjoint: {-gain*100:+.1f}%")
+    return out
+
+
 def main(report, quick: bool = False) -> List[str]:
     global JSON_PAYLOAD
     rows: List[str] = []
@@ -190,6 +271,12 @@ def main(report, quick: bool = False) -> List[str]:
             f"e2e/overload/{scen},"
             f"goodput_base={modes['baseline']['goodput']*100:.1f}%,"
             f"goodput_preempt={modes['preempt']['goodput']*100:.1f}%")
+    mb = _mixed_batch(report, quick)
+    payload["mixed_batch"] = mb
+    rows.append(
+        f"e2e/mixed_batch/decode_burst,"
+        f"itl_p99_piggyback={mb['piggyback']['itl_p99']*1000:.1f}ms,"
+        f"itl_p99_disjoint={mb['disjoint']['itl_p99']*1000:.1f}ms")
     # namespace by sweep mode: --quick (duration 5, first qps) and full
     # (duration 15, all qps) numbers are systematically different, so
     # they live under separate keys — a quick rerun can never overwrite

@@ -32,6 +32,14 @@ out to host and resumed later).  Requires the preempting run to post
 strictly higher goodput (SLO-attained fraction) with every request
 still finishing, and records both sides in the payload's
 `real_plane_overload` section.
+
+`--mixed-bench` runs the unified mixed-batch A/B instead: long-output
+residents decode on a small unified pool while long prompts arrive
+mid-decode, served twice — chunked prefill piggybacked into the decode
+steps vs the disjoint (prefill-prioritizing, rows stall) ablation.
+Requires piggybacking to post a strictly lower ITL p99 at
+equal-or-higher throughput, and records both sides in the payload's
+`real_plane_mixed` section.
 """
 import argparse
 import json
@@ -318,6 +326,131 @@ def run_overload_bench(cfg, params, args):
     return ok, section
 
 
+def run_mixed_bench(cfg, params, args):
+    """Unified mixed-batch A/B on the real plane: the same trace served
+    twice by the SAME unified (decode-pool-only) deployment — chunked
+    prefill piggybacked into the decode steps vs the disjoint ablation
+    (prefill-prioritizing: a step with pending prefill runs only the
+    chunk and the resident decode rows stall).  Returns
+    (ok, report-section).
+
+    Four long-output residents decode on a 2-DP pool while eight long
+    prompts arrive mid-decode; `mixed_chunk` is small enough that each
+    prompt needs several chunk-steps, so the disjoint leg inserts
+    repeated stall bubbles into the residents' token streams.  Gate:
+    piggybacking must post a strictly lower ITL p99 at equal-or-higher
+    throughput (tokens / completion wall time).  ITL is the strict
+    axis; both legs do identical total work, so their throughputs are
+    theoretically near-equal and "equal" is judged with a 5%
+    measurement tolerance over the median of three timed serves —
+    single wall-clock samples on a shared host swing more than the
+    piggyback effect size."""
+    import dataclasses
+
+    from repro.serving.metrics import percentile
+
+    bs = args.block_size or 16
+    rng = random.Random(args.seed)
+    res_in, res_out = 32, 120        # lifetime 152 ≤ max_len 160
+    burst_in, burst_out = 96, 4      # lifetime 100; 96 = 3 chunks of 32
+    scfg = ServingConfig(
+        num_prefill_instances=1, prefill_dp_per_instance=1,
+        num_decode_instances=1, decode_dp_per_instance=2,
+        chunk_size=32, t_default=0.05, l_net=0.001,
+        max_batch_per_dp=8, block_size=bs,
+        mixed_batch=True, mixed_chunk=32)
+    res_toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(res_in))
+                for _ in range(4)]
+    burst_toks = [tuple(rng.randrange(cfg.vocab_size)
+                        for _ in range(burst_in)) for _ in range(8)]
+
+    def fresh():
+        res = [Request(rid=i, arrival_time=0.02 * i, input_len=res_in,
+                       output_len=res_out, tokens=res_toks[i])
+               for i in range(4)]
+        burst = [Request(rid=10 + i, arrival_time=0.5 + 0.15 * i,
+                         input_len=burst_in, output_len=burst_out,
+                         tokens=burst_toks[i])
+                 for i in range(8)]
+        return res + burst
+
+    print(f"\n#### mixed-batch A/B: 4 residents ({res_in}in/{res_out}out) "
+          f"+ 8 prompts ({burst_in}in/{burst_out}out) on a 2-DP unified "
+          f"pool, mixed_chunk={scfg.mixed_chunk}, block_size={bs}")
+    ok = True
+    section = {"block_size": bs, "mixed_chunk": scfg.mixed_chunk}
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN,
+                      max_batch=scfg.max_batch_per_dp,
+                      max_new=max(res_out, burst_out),
+                      block_size=bs, decode_slots=scfg.resolved_decode_slots)
+    for mode, piggy in (("piggyback", True), ("disjoint", False)):
+        srv = RealSBSServer(cfg, params,
+                            serving_cfg=dataclasses.replace(
+                                scfg, mixed_piggyback=piggy),
+                            scheduler="sbs-la", max_len=MAX_LEN,
+                            max_new=max(res_out, burst_out), spec=spec)
+        # warmup serve of the SAME trace: compiles every jitted
+        # mixed/prefill/decode shape this leg will hit, so the timed
+        # runs measure scheduling, not compilation
+        srv.serve(fresh(), timeout=args.timeout)
+        # median of three timed serves: single wall-clock runs on a
+        # shared host swing tens of percent on transient load, which is
+        # exactly what a strict A/B gate must not be judging
+        samples = []
+        for _ in range(3):
+            for e in srv.decode_engines:
+                e.itl.clear()
+            reqs = fresh()
+            gens = srv.serve(reqs, timeout=args.timeout)
+            if len(gens) < len(reqs):
+                missing = sorted(set(r.rid for r in reqs)
+                                 - set(g.rid for g in gens))
+                print(f"  {mode}: UNFINISHED rids {missing}")
+                ok = False
+                break
+            itls = [s for e in srv.decode_engines for s in e.itl]
+            toks = sum(r.generated for r in reqs)
+            span = max((r.finish_time for r in reqs
+                        if r.finish_time is not None), default=0.0)
+            samples.append({
+                "itl_p50": percentile(itls, 50) if itls else 0.0,
+                "itl_p99": percentile(itls, 99) if itls else 0.0,
+                "throughput": toks / span if span > 0 else 0.0,
+            })
+        if not samples:
+            continue
+        med = {k: sorted(s[k] for s in samples)[len(samples) // 2]
+               for k in samples[0]}
+        section[mode] = med
+        section[mode].update({
+            "runs": len(samples),
+            "mixed_steps": sum(e.mixed_steps for e in srv.decode_engines),
+            "forced_grants": sum(e.forced_grants
+                                 for e in srv.decode_engines),
+            "prefill_tokens": sum(e.prefill_tokens
+                                  for e in srv.decode_engines),
+        })
+        s = section[mode]
+        print(f"  {mode:>9}: itl_p99={s['itl_p99']*1000:7.1f}ms "
+              f"p50={s['itl_p50']*1000:6.1f}ms thr={s['throughput']:6.1f} "
+              f"tok/s mixed_steps={s['mixed_steps']} "
+              f"prefill_tok={s['prefill_tokens']}")
+    if ok:
+        p, d = section["piggyback"], section["disjoint"]
+        if not (p["itl_p99"] < d["itl_p99"]
+                and p["throughput"] >= 0.95 * d["throughput"]):
+            print("  mixed gate FAILED: need piggyback itl_p99 strictly "
+                  "below disjoint at equal-or-higher throughput "
+                  "(5% tolerance)")
+            ok = False
+        else:
+            print(f"  gate OK: itl_p99 "
+                  f"{(1 - p['itl_p99'] / d['itl_p99']) * 100:+.1f}% "
+                  f"thr {(p['throughput'] / d['throughput'] - 1) * 100:+.1f}%"
+                  f" vs disjoint")
+    return ok, section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -348,6 +481,10 @@ def main():
     ap.add_argument("--interactive-slo", type=float, default=0.6,
                     help="e2e deadline (s) for the interactive class in "
                          "--overload-bench")
+    ap.add_argument("--mixed-bench", action="store_true",
+                    help="run the unified mixed-batch A/B (piggybacked "
+                         "chunked prefill vs the disjoint stall-the-rows "
+                         "ablation) instead of the scheduler sweep")
     args = ap.parse_args()
     if args.compare_padded and not args.block_size:
         ap.error("--compare-padded needs a paged plane (--block-size > 0); "
@@ -357,13 +494,16 @@ def main():
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    if args.prefix_bench or args.overload_bench:
+    if args.prefix_bench or args.overload_bench or args.mixed_bench:
         if args.prefix_bench:
             key, (ok, section) = ("real_plane_prefix",
                                   run_prefix_bench(cfg, params, args))
-        else:
+        elif args.overload_bench:
             key, (ok, section) = ("real_plane_overload",
                                   run_overload_bench(cfg, params, args))
+        else:
+            key, (ok, section) = ("real_plane_mixed",
+                                  run_mixed_bench(cfg, params, args))
         if args.bench_json:
             payload = {}
             if os.path.exists(args.bench_json):

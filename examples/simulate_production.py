@@ -12,8 +12,8 @@ from repro.config import ServingConfig, get_arch
 from repro.serving.cluster import DecodeClusterSim, PrefillClusterSim
 from repro.serving.e2e import PDClusterSim
 from repro.serving.workload import (
-    BURSTY, DIURNAL, HEAVY_TAIL, OVERLOAD_SPIKE, SHARED_PREFIX, SHORT,
-    WorkloadSpec, generate,
+    BURSTY, DECODE_BURST, DIURNAL, HEAVY_TAIL, OVERLOAD_SPIKE,
+    SHARED_PREFIX, SHORT, WorkloadSpec, generate,
 )
 
 
@@ -71,6 +71,32 @@ def main():
         rep = sim.run(reqs, 30.0 if args.quick else 60.0,
                       closed_loop=32 * 35)
         print(f"{sched:10s} {rep.row()}")
+
+    print("\n== Decode-heavy bursts (decode_burst): P/D pipeline vs "
+          "unified mixed-batch plane ==")
+    # same 4-DP decode pool on the 7B arch (mixed chunk sizing is
+    # per-arch; 2048 @ 7B keeps the mixed step near the decode step —
+    # see benchmarks/e2e_pd._mixed_batch): the unified plane runs
+    # chunked prefill inside the decode steps, no transfer hop
+    cfg7 = get_arch("deepseek-7b")
+    mdur = 4.0 if args.quick else 8.0
+    pipe_cfg = ServingConfig(num_prefill_instances=1,
+                             prefill_dp_per_instance=4,
+                             num_decode_instances=1,
+                             decode_dp_per_instance=4, chunk_size=2048)
+    unified_cfg = ServingConfig(num_prefill_instances=1,
+                                num_decode_instances=1,
+                                decode_dp_per_instance=4,
+                                mixed_batch=True, mixed_chunk=2048,
+                                bucket_size=512)
+    for label, c in (("pd_pipeline", pipe_cfg),
+                     ("unified", unified_cfg),
+                     ("unified_disjoint", dataclasses.replace(
+                         unified_cfg, mixed_piggyback=False))):
+        reqs = generate(DECODE_BURST, qps=6, duration=mdur, seed=31)
+        sim = PDClusterSim(cfg7, c, scheduler="sbs-la")
+        rep = sim.run(reqs, mdur)
+        print(f"{label:>17}  {rep.row()}")
 
     print("\n== Overload control: SLO classes under a 5x spike and a "
           "compressed diurnal cycle ==")

@@ -14,7 +14,11 @@ silent loss of page reuse fails the build like a latency regression
 would.  Likewise rows with a positive baseline `goodput` (every e2e
 scenario, including the overload-control A/B section) fail on a goodput
 drop beyond the threshold — overload control shedding load it used to
-serve is a regression, not a tuning choice.  The sims are deterministic, so the threshold guards real
+serve is a regression, not a tuning choice.  Rows with a positive
+baseline `itl_p99` (inter-token latency, recorded since the unified
+mixed-batch plane) fail on an ITL-p99 inflation beyond the threshold —
+decode smoothness is the metric piggybacked prefill exists to protect.
+The sims are deterministic, so the threshold guards real
 scheduling/cost-model regressions, not noise — but --quick baselines
 must be compared against --quick runs.
 """
@@ -105,6 +109,11 @@ def main() -> int:
             hit_note += f" good x{good_ratio:.3f}"
             if good_ratio < 1.0 - args.threshold:
                 verdicts.append(f"goodput {good_ratio - 1:+.1%}")
+        if b.get("itl_p99", 0.0) > 0.0:
+            itl_ratio = f_.get("itl_p99", 0.0) / b["itl_p99"]
+            hit_note += f" itl x{itl_ratio:.3f}"
+            if itl_ratio > 1.0 + args.threshold:
+                verdicts.append(f"itl_p99 {itl_ratio - 1:+.1%}")
         status = "FAIL " + ", ".join(verdicts) if verdicts else "ok"
         print(f"  {name:<44} ttft_p99 x{ttft_ratio:.3f} "
               f"thr x{thr_ratio:.3f}{hit_note}  {status}")

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 entry point.
 #
-#   scripts/ci.sh               fast tier-1: the @paged property suite
-#                               (block allocator + cache surgery) first,
-#                               then the full suite minus @slow model
-#                               cases, then the benchmark smoke
+#   scripts/ci.sh               fast tier-1: the @mixed suite (unified
+#                               mixed-batch plane) first, then the @paged
+#                               property suite (block allocator + cache
+#                               surgery), then the full suite minus @slow
+#                               model cases, then the benchmark smoke
 #                               (microbench + quick e2e_pd emitting
 #                               BENCH_e2e.json) guarded against the
 #                               committed baseline (>25% TTFT-p99 or
@@ -26,7 +27,13 @@
 #                               the SLO-overload A/B — page-level
 #                               preemption must post strictly higher
 #                               goodput than drain-only at equal KV
-#                               memory [real_plane_overload]
+#                               memory [real_plane_overload].  Finally
+#                               the unified mixed-batch A/B — chunked
+#                               prefill piggybacked into the decode
+#                               steps must post a strictly lower ITL p99
+#                               at equal-or-higher throughput than the
+#                               disjoint (prefill-prioritizing) ablation
+#                               [real_plane_mixed]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -54,6 +61,13 @@ if [[ "${1:-}" == "--real-smoke" ]]; then
                   "above drain-only, no preemptions, unfinished requests," \
                   "or >300s)" >&2
              exit 1; }
+    echo "== real-plane mixed-batch A/B (piggyback vs disjoint, 600s budget) =="
+    PYTHONPATH=src timeout 600 python examples/serve_e2e.py \
+        --timeout 150 --mixed-bench --bench-json BENCH_e2e.json \
+        || { echo "mixed smoke FAILED (piggyback itl_p99 not strictly" \
+                  "below disjoint at equal-or-higher throughput," \
+                  "unfinished requests, or >600s)" >&2
+             exit 1; }
     echo "REAL SMOKE OK"
     exit 0
 fi
@@ -62,11 +76,13 @@ echo "== tier-1 tests =="
 if [[ "${1:-}" == "--full" ]]; then
     PYTHONPATH=src python -m pytest -q
 else
-    # paged KV property suite first (fail fast on the newest subsystem),
-    # then everything else; @slow — including the heavyweight cross-plane
-    # equivalence sweep — stays behind --full
-    PYTHONPATH=src python -m pytest -q -m "paged and not slow"
-    PYTHONPATH=src python -m pytest -q -m "not slow and not paged"
+    # mixed-batch suite first (fail fast on the newest subsystem), then
+    # the paged KV property suite, then everything else; @slow —
+    # including the heavyweight cross-plane equivalence sweep — stays
+    # behind --full
+    PYTHONPATH=src python -m pytest -q -m "mixed and not slow"
+    PYTHONPATH=src python -m pytest -q -m "paged and not slow and not mixed"
+    PYTHONPATH=src python -m pytest -q -m "not slow and not paged and not mixed"
 fi
 
 echo "== benchmark smoke (microbench) =="

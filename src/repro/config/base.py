@@ -261,6 +261,30 @@ class ServingConfig:
     flow_control: bool = False
     flow_backoff: float = 0.05
     slo_default: float = 20.0
+    # Unified mixed-batch plane (Sarathi-style piggybacking).  With
+    # `mixed_batch` on, the deployment runs ONE pool of unified engines:
+    # prompts are admitted directly to the decode plane and their
+    # chunked-prefill work rides the leftover per-step token budget
+    # (`mixed_chunk − decode_rows`) of the SAME forward pass the decode
+    # rows run in, so decode never stalls behind a prefill pass.
+    # `prefill_starve_limit` bounds lockout: after that many consecutive
+    # steps where pending prefill got zero budget, the next step grants
+    # a chunk regardless of decode load.  `mixed_piggyback=False` is the
+    # ablation leg (disjoint steps on the same engine: a step runs
+    # EITHER the pending prefill chunk OR the decode rows) used by the
+    # real-plane A/B.
+    mixed_batch: bool = False
+    mixed_chunk: int = 0                    # per-DP step token budget (0 => chunk_size)
+    prefill_starve_limit: int = 4
+    mixed_piggyback: bool = True
+    # Length-bucketed batch formation (BucketServe) inside the SBS
+    # buffering window: queued prompts are grouped by padded-length
+    # class (`ceil(input_len / bucket_size)`) and a dispatch draws from
+    # whole buckets — starved buckets (held back `bucket_max_wait`
+    # dispatch cycles) first, then densest — so co-batched prompts pad
+    # to a common boundary instead of the batch max.  0 disables.
+    bucket_size: int = 0
+    bucket_max_wait: int = 4
 
     def __post_init__(self):
         if self.decode_slots_per_dp and not self.block_size:
@@ -270,6 +294,15 @@ class ServingConfig:
             raise ValueError(
                 "decode_slots_per_dp requires block_size > 0 (padded "
                 "slots are fixed by max_batch_per_dp)")
+        if self.mixed_chunk and not self.mixed_batch:
+            raise ValueError(
+                "mixed_chunk is only meaningful with mixed_batch=True")
+
+    @property
+    def resolved_mixed_chunk(self) -> int:
+        """Per-DP token budget of one unified step: decode rows cost one
+        token each, the remainder is the prefill piggyback allowance."""
+        return self.mixed_chunk or self.chunk_size
 
     @property
     def resolved_decode_slots(self) -> int:

@@ -55,7 +55,8 @@ class StaggeredBatchScheduler(PrefillScheduler):
     def __init__(self, state: GlobalState, n_limit: int = 8,
                  cache_aware: bool = False,
                  prefix_cache: Optional[PrefixCacheIndex] = None,
-                 watchdog_multiplier: float = 5.0):
+                 watchdog_multiplier: float = 5.0,
+                 bucket_size: int = 0, bucket_max_wait: int = 4):
         self.state = state
         self.sync = SyncProtocol(state.num_prefill_instances,
                                  watchdog_multiplier)
@@ -70,6 +71,16 @@ class StaggeredBatchScheduler(PrefillScheduler):
         self._starved = False               # no capacity: wait for feedback
         self.cycles = 0
         self.util_history: List[float] = []
+        # length-bucketed batch formation (BucketServe-style): queued
+        # prompts are grouped by padded-length class inside the SBS
+        # buffering window and ONE class dispatches per cycle, so
+        # co-batched prompts pad to near-equal lengths.  bucket_size=0
+        # disables (seed behavior: the whole buffer dispatches).
+        self.bucket_size = max(int(bucket_size), 0)
+        self.bucket_max_wait = max(int(bucket_max_wait), 1)
+        self._bucket_wait: Dict[int, int] = {}   # class -> starved cycles
+        self.padding_tokens_wasted = 0      # pad-to-batch-max token waste
+        self.bucket_dispatches = 0          # dispatches that were bucketed
 
     # ------------------------------------------------------------------
     def reset_clock(self) -> None:
@@ -128,10 +139,62 @@ class StaggeredBatchScheduler(PrefillScheduler):
                 return inst
         return None
 
+    # -- length-bucketed batch formation --------------------------------
+    def _length_class(self, req: Request) -> int:
+        """Padded-length class: prompts in one class pad to at most one
+        `bucket_size` of waste when co-batched."""
+        return max((req.input_len + self.bucket_size - 1)
+                   // self.bucket_size, 1)
+
+    def _select_bucket(self) -> List[Request]:
+        """Pick ONE length class from the buffer; hold the rest back.
+
+        Starved-first: a class that sat unselected for more than
+        `bucket_max_wait` dispatch cycles wins outright (oldest starvation
+        first), otherwise the class with the most queued prompt tokens
+        dispatches — the one whose padding savings matter most."""
+        classes: Dict[int, List[Request]] = {}
+        for r in self.buffer:
+            classes.setdefault(self._length_class(r), []).append(r)
+        # drop wait state of emptied classes
+        self._bucket_wait = {c: w for c, w in self._bucket_wait.items()
+                             if c in classes}
+        starved = [c for c in classes
+                   if self._bucket_wait.get(c, 0) >= self.bucket_max_wait]
+        if starved:
+            chosen = max(starved, key=lambda c: self._bucket_wait.get(c, 0))
+        else:
+            chosen = max(classes,
+                         key=lambda c: sum(r.input_len for r in classes[c]))
+        for c in classes:
+            if c == chosen:
+                self._bucket_wait[c] = 0
+            else:
+                self._bucket_wait[c] = self._bucket_wait.get(c, 0) + 1
+        held = [r for c, lst in classes.items() if c != chosen for r in lst]
+        self.buffer = held
+        return classes[chosen]
+
+    def _note_padding(self, reqs: List[Request]) -> None:
+        """Pad-to-batch-max waste of the NEW prompts entering this
+        dispatch (the BucketServe metric; FLOPs-priced by the cost
+        model's `padding_flops_wasted`)."""
+        lens = [r.input_len for r in reqs]
+        if len(lens) > 1:
+            top = max(lens)
+            self.padding_tokens_wasted += sum(top - ln for ln in lens)
+
     def _dispatch_to(self, inst: int, now: float) -> Optional[DispatchCommand]:
         dps = self.state.prefill_dps_of(inst)
+        if self.bucket_size and self.buffer:
+            new = self._select_bucket()     # holds other classes back
+            self.bucket_dispatches += 1
+        else:
+            new = self.buffer
+            self.buffer = []
+        self._note_padding(new)
         assignments, q_next, over = pbaa(
-            self.pending, self.buffer, dps, n_limit=self.n_limit,
+            self.pending, new, dps, n_limit=self.n_limit,
             cache=self.cache)
         self.cycles += 1
         self.util_history.append(chunk_utilization(assignments, dps))
@@ -148,7 +211,6 @@ class StaggeredBatchScheduler(PrefillScheduler):
             else:
                 kept.append(r)
         self.pending = q_next + kept
-        self.buffer = []
         if not assignments:
             return None
         for dp_id, lst in assignments.items():
@@ -267,7 +329,8 @@ class DecodeScheduler:
                  policy: str = "round_robin", iqr_k: float = 1.5,
                  window: float = 0.05, alloc: str = "lex",
                  watchdog_multiplier: float = 0.0,
-                 prefix_cache: Optional[PrefixCacheIndex] = None):
+                 prefix_cache: Optional[PrefixCacheIndex] = None,
+                 bucket_size: int = 0):
         if alloc not in ("lex", "load_aware"):
             raise ValueError(alloc)
         self.state = state
@@ -277,6 +340,11 @@ class DecodeScheduler:
         self.window = window
         self.alloc = alloc
         self.cache = prefix_cache
+        # bucketed pricing: >0 groups each window batch by padded-length
+        # class and runs the allocator once per class (largest first), so
+        # the lex/load-aware allocators price near-equal-length groups
+        # instead of a raw mixed-length batch
+        self.bucket_size = max(int(bucket_size), 0)
         self.buffer: List[Request] = []
         self._rr = [0]
         self._last = -float("inf")
@@ -318,6 +386,24 @@ class DecodeScheduler:
                     self.cache.insert(dp_id, r.tokens[:r.input_len])
 
     def _allocate(self, batch: List[Request]) -> Dict:
+        if self.bucket_size and len(batch) > 1:
+            classes: Dict[int, List[Request]] = {}
+            for r in batch:
+                c = max((r.input_len + self.bucket_size - 1)
+                        // self.bucket_size, 1)
+                classes.setdefault(c, []).append(r)
+            if len(classes) > 1:
+                # largest class first: it moves the per-DP KV budgets the
+                # most, and later (smaller) classes then pack around it
+                out: Dict[int, List[Request]] = {}
+                for c in sorted(classes, reverse=True):
+                    placed = self._allocate_one(classes[c])
+                    for dp_id, reqs in (placed or {}).items():
+                        out.setdefault(dp_id, []).extend(reqs)
+                return out
+        return self._allocate_one(batch)
+
+    def _allocate_one(self, batch: List[Request]) -> Dict:
         aff = self._affinity if self.cache is not None else None
         if self.alloc == "load_aware":
             out = schedule_decode_global(

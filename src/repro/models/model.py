@@ -576,6 +576,46 @@ def paged_prefill_step(cfg: ModelConfig, params, tokens, cache, slot):
     return logits, new_cache
 
 
+def mixed_step(cfg: ModelConfig, params, token, cache, chunks,
+               decode_mask=None):
+    """One unified mixed-batch step (Sarathi-style piggybacking): the
+    paged decode rows AND one or more chunked-prefill writes share a
+    single jitted computation over the same block pool.
+
+    token (slots, 1) int32 — next token per decode slot (garbage rows
+    route to the null block exactly as in `paged_decode_step`);
+    `chunks` — sequence of `(tokens (1, Sc) int32, slot)` prefill
+    chunks applied in order with `paged_prefill_step` semantics;
+    `decode_mask` (slots,) bool — True for slots actively decoding.
+    Slots that are RESIDENT but still prefilling have real block-table
+    rows, so the mask is what keeps the decode half from scribbling a
+    garbage token into their pages / bumping their cursors: masked rows
+    decode against a -1 table (null block) and keep `cur` unchanged.
+
+    Returns (decode logits (slots, V), tuple of per-chunk last-position
+    logits (1, V), cache).  Token-exact vs running `paged_decode_step`
+    then each `paged_prefill_step` serially: decode slots and prefill
+    slots are disjoint and each sub-step touches only its own pages, so
+    composition order is unobservable (property-tested in
+    tests/test_mixed_batch.py).  The Pallas decode kernel is unchanged —
+    this composes the existing step functions into one XLA program."""
+    tab = cache["block_tab"]
+    cur = cache["cur"]
+    if decode_mask is not None:
+        dcache = dict(cache)
+        dcache["block_tab"] = jnp.where(decode_mask[:, None], tab, -1)
+        logits, cache = paged_decode_step(cfg, params, token, dcache)
+        cache["block_tab"] = tab
+        cache["cur"] = jnp.where(decode_mask, cur + 1, cur)
+    else:
+        logits, cache = paged_decode_step(cfg, params, token, cache)
+    chunk_logits = []
+    for ctoks, slot in chunks:
+        lg, cache = paged_prefill_step(cfg, params, ctoks, cache, slot)
+        chunk_logits.append(lg)
+    return logits, tuple(chunk_logits), cache
+
+
 def paged_copy_block(cfg: ModelConfig, cache: Dict, src, dst) -> Dict:
     """Copy physical block `src` → `dst` across every attention pool and
     the position map — the copy half of copy-on-write.  The caller owns

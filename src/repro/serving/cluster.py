@@ -25,7 +25,9 @@ from repro.core.state import GlobalState
 from repro.core.interval import AdaptiveIntervalController
 from repro.core.types import Request
 from repro.serving.costmodel import CostModel
-from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
+from repro.serving.engine import (
+    SimDecodeInstance, SimPrefillInstance, SimUnifiedInstance,
+)
 from repro.serving.metrics import (
     DecodeReport, PrefillReport, decode_report, prefill_report,
 )
@@ -63,7 +65,9 @@ def build_prefill_scheduler(state: GlobalState, scfg: ServingConfig,
         return StaggeredBatchScheduler(
             state, n_limit=scfg.n_limit, cache_aware=scfg.cache_aware,
             prefix_cache=cache,
-            watchdog_multiplier=scfg.watchdog_multiplier)
+            watchdog_multiplier=scfg.watchdog_multiplier,
+            bucket_size=scfg.bucket_size,
+            bucket_max_wait=scfg.bucket_max_wait)
     if scheduler in ("immediate-rr", "immediate-lt"):
         pol = "round_robin" if scheduler.endswith("rr") else "least_tokens"
         return ImmediatePrefillScheduler(state, pol)
@@ -100,7 +104,7 @@ def build_decode_scheduler(state: GlobalState, scfg: ServingConfig,
         state, mode=mode, policy=policy, iqr_k=scfg.iqr_k,
         window=scfg.l_net * 10 + 0.02, alloc=alloc,
         watchdog_multiplier=watchdog_multiplier,
-        prefix_cache=cache)
+        prefix_cache=cache, bucket_size=scfg.bucket_size)
 
 
 def build_prefill_instances(state: GlobalState, scfg: ServingConfig,
@@ -112,7 +116,19 @@ def build_prefill_instances(state: GlobalState, scfg: ServingConfig,
 
 
 def build_decode_instances(state: GlobalState, scfg: ServingConfig,
-                           cost: CostModel):
+                           cost: CostModel, unified: Optional[bool] = None):
+    """`unified` (default: scfg.mixed_batch) swaps in the mixed-batch
+    plane: SimUnifiedInstance runs chunked prefill piggybacked on the
+    decode steps, so the deployment needs no prefill pool at all."""
+    if unified is None:
+        unified = scfg.mixed_batch
+    if unified:
+        return [SimUnifiedInstance(
+                    i, [d.dp_id for d in state.decode_dps_of(i)], cost,
+                    chunk=scfg.resolved_mixed_chunk,
+                    starve_limit=scfg.prefill_starve_limit,
+                    piggyback=scfg.mixed_piggyback)
+                for i in range(scfg.num_decode_instances)]
     return [SimDecodeInstance(
                 i, [d.dp_id for d in state.decode_dps_of(i)], cost)
             for i in range(scfg.num_decode_instances)]

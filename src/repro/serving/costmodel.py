@@ -151,3 +151,52 @@ class CostModel:
             return self.t_sync
         return max(self.decode_dp_time(b, k)
                    for b, k in zip(batches, kvs)) + self.t_sync
+
+    # ------------------------------------------------------------------
+    def mixed_dp_time(self, batch: int, kv_tokens: int,
+                      prefill_tokens: int) -> float:
+        """One UNIFIED mixed-batch iteration on one DP unit: `batch`
+        decode rows plus `prefill_tokens` piggybacked chunked-prefill
+        tokens in the same forward pass.
+
+        This is where the Sarathi win lives in the roofline: the decode
+        step is memory-bound on the WEIGHT sweep, so riding prefill
+        compute on the same pass reuses that sweep — t_mem gains only
+        the prefill tokens' KV writes, while a disjoint prefill pass
+        would pay the whole weight read again.  Compute and all-to-all
+        scale with the extra tokens as usual."""
+        if batch <= 0 and prefill_tokens <= 0:
+            return 0.0
+        chips = self.chips_per_decode_dp
+        flops = (2.0 * self._active_params * max(batch, 0)
+                 / self.decode_ep_size)
+        flops += self.prefill_flops(prefill_tokens) / self.decode_ep_size
+        t_comp = flops / (chips * PEAK_FLOPS * self.mfu)
+        bytes_moved = (self.active_param_bytes / self.decode_ep_size
+                       + self.kv_bytes_per_token * kv_tokens
+                       + self.kv_bytes_per_token * max(prefill_tokens, 0))
+        t_mem = bytes_moved / (chips * HBM_BW * self.mbu)
+        t_comm = ((max(batch, 0) + max(prefill_tokens, 0))
+                  * self.a2a_bytes_per_token / ICI_BW)
+        return max(t_comp, t_mem) + t_comm
+
+    def mixed_step_time(self, batches: Sequence[int], kvs: Sequence[int],
+                        prefill_tokens: Sequence[int]) -> float:
+        """Instance-level unified step (sync barrier across DP units)."""
+        if not batches:
+            return self.t_sync
+        return max(self.mixed_dp_time(b, k, p)
+                   for b, k, p in zip(batches, kvs, prefill_tokens)
+                   ) + self.t_sync
+
+    def padding_flops_wasted(self, lens: Sequence[int],
+                             pad_to: Optional[int] = None) -> float:
+        """FLOPs spent on PADDING when the prompt lengths `lens` are
+        formed into one batch padded to a common length (`pad_to`,
+        default the batch max) — the BucketServe waste metric.  Bucketed
+        formation shrinks this by co-batching near-equal lengths."""
+        if not lens:
+            return 0.0
+        target = pad_to if pad_to is not None else max(lens)
+        wasted = sum(max(target - ln, 0) for ln in lens)
+        return self.prefill_flops(wasted)

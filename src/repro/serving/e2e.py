@@ -35,6 +35,11 @@ class E2EReport:
     goodput: float                  # fraction finishing within slo_e2e
     prefill_util: float
     throughput: float = 0.0        # decode tokens / s over the run
+    # inter-token latency (gap between consecutive emissions of one
+    # request) — the unified mixed-batch plane's tentpole metric: decode
+    # stalls behind disjoint prefill passes surface as a fat ITL p99
+    itl_p50: float = 0.0
+    itl_p99: float = 0.0
     prefix_hit_rate: float = 0.0   # cached prefix tokens / prompt tokens
     prefill_flops_saved: float = 0.0   # FLOPs skipped via prefix reuse
     # SLO-aware overload control (all zero/empty when it is off)
@@ -47,6 +52,7 @@ class E2EReport:
         out = (f"n={self.n_finished} ttft={self.ttft_mean*1000:.0f}ms "
                f"p99={self.ttft_p99*1000:.0f}ms "
                f"tpot={self.tpot_mean*1000:.1f}ms "
+               f"itl_p99={self.itl_p99*1000:.1f}ms "
                f"e2e={self.e2e_mean:.2f}s goodput={self.goodput*100:.1f}% "
                f"util={self.prefill_util*100:.1f}% "
                f"thr={self.throughput:.0f} tok/s")
@@ -65,6 +71,7 @@ class E2EReport:
         return {"n_finished": self.n_finished,
                 "ttft_p50": self.ttft_p50, "ttft_p99": self.ttft_p99,
                 "ttft_mean": self.ttft_mean, "tpot_mean": self.tpot_mean,
+                "itl_p50": self.itl_p50, "itl_p99": self.itl_p99,
                 "throughput": self.throughput, "goodput": self.goodput,
                 "prefix_hit_rate": self.prefix_hit_rate,
                 "prefill_flops_saved": self.prefill_flops_saved,
@@ -88,26 +95,37 @@ class PDClusterSim:
         self.cost = cost or CostModel(model_cfg)
         self.state = build_state(scfg)
         self.transfer_bw = transfer_bw
-        if scheduler in ("sbs", "sbs-la"):
-            self.psched = build_prefill_scheduler(self.state, scfg, "sbs")
+        if scheduler not in ("sbs", "sbs-la", "immediate"):
+            raise ValueError(scheduler)
+        if scfg.mixed_batch:
+            # unified mixed-batch plane: DECODE-POOL-ONLY deployment —
+            # arrivals hand off straight to the decode scheduler and the
+            # unified instances run chunked prefill piggybacked on their
+            # own steps (no prefill pool, no KV transfer)
+            self.psched = None
+            self.prefill = []
         elif scheduler == "immediate":
             self.psched = build_prefill_scheduler(self.state, scfg,
                                                   "immediate-rr")
+            self.prefill = build_prefill_instances(self.state, scfg,
+                                                   self.cost)
         else:
-            raise ValueError(scheduler)
+            self.psched = build_prefill_scheduler(self.state, scfg, "sbs")
+            self.prefill = build_prefill_instances(self.state, scfg,
+                                                   self.cost)
         self.dsched = build_decode_scheduler(
             self.state, scfg, scheduler,
             watchdog_multiplier=watchdog_multiplier)
-        self.prefill = build_prefill_instances(self.state, scfg, self.cost)
         self.decode = build_decode_instances(self.state, scfg, self.cost)
         flow = (FlowController(n_limit=scfg.n_limit,
                                backoff_base=scfg.flow_backoff)
                 if scfg.flow_control else None)
         self.runtime = ClusterRuntime(
             self.state, prefill_sched=self.psched,
-            prefill_instances=self.prefill, decode_sched=self.dsched,
+            prefill_instances=self.prefill or None,
+            decode_sched=self.dsched,
             decode_instances=self.decode,
-            transfer_time=self._transfer_time,
+            transfer_time=None if scfg.mixed_batch else self._transfer_time,
             flow=flow, preemption=scfg.preemption)
 
     def _transfer_time(self, req: Request) -> float:
@@ -137,11 +155,16 @@ class PDClusterSim:
         hit_rate = cache.hit_rate if cache is not None else 0.0
         saved = (self.cost.prefill_flops(cache.hit_tokens)
                  if cache is not None and cache.hit_tokens else 0.0)
+        itls = [s for inst in self.decode
+                for s in getattr(inst, "itl", [])]
         return E2EReport(
             n_finished=len(done),
             ttft_mean=mean(ttfts), ttft_p50=percentile(ttfts, 50),
             ttft_p99=percentile(ttfts, 99),
-            tpot_mean=mean(tpots), e2e_mean=mean(e2e), goodput=good,
+            tpot_mean=mean(tpots), e2e_mean=mean(e2e),
+            itl_p50=percentile(itls, 50) if itls else 0.0,
+            itl_p99=percentile(itls, 99) if itls else 0.0,
+            goodput=good,
             prefill_util=self.runtime.prefill_util,
             throughput=self.runtime.tokens_generated / max(end, 1e-9),
             prefix_hit_rate=hit_rate, prefill_flops_saved=saved,

@@ -18,10 +18,11 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 from repro.core.types import DispatchCommand, EndForward, Request
 from repro.serving.costmodel import CostModel
 from repro.serving.plane import (
-    DecodeEngine, PassResult, PrefillEngine, StartResult,
+    DecodeEngine, PassResult, PrefillEngine, StartResult, UnifiedEngine,
 )
 
-__all__ = ["PassResult", "SimPrefillInstance", "SimDecodeInstance"]
+__all__ = ["PassResult", "SimPrefillInstance", "SimDecodeInstance",
+           "SimUnifiedInstance"]
 
 
 class SimPrefillInstance(PrefillEngine):
@@ -151,6 +152,18 @@ class SimDecodeInstance(DecodeEngine):
         self.tokens_generated = 0
         self.steps = 0
         self.epoch = 0      # bumped on drain(); invalidates in-flight steps
+        # inter-token latency samples (gap between consecutive emissions
+        # of one request on THIS engine) — the tentpole metric of the
+        # unified plane: a decode stall behind a prefill pass shows up
+        # here as a fat p99
+        self.itl: List[float] = []
+        self._last_emit: Dict[int, float] = {}
+
+    def _record_emit(self, rid: int, now: float) -> None:
+        last = self._last_emit.get(rid)
+        if last is not None:
+            self.itl.append(now - last)
+        self._last_emit[rid] = now
 
     def admit(self, dp_id: int, req: Request) -> None:
         self.running[dp_id].append(req)
@@ -219,12 +232,189 @@ class SimDecodeInstance(DecodeEngine):
                 req.generated += 1
                 if req.first_token_time is None:
                     req.first_token_time = now
+                self._record_emit(req.rid, now)
                 if req.generated >= self._target_len(req):
                     req.finish_time = now
                     st.release(req.input_len + req.generated,
                                reserve_len=req.input_len + req.output_len)
+                    self._last_emit.pop(req.rid, None)
                     finished.append(req)
                 else:
                     alive.append(req)
             self.running[d] = alive
+        return finished
+
+class SimUnifiedInstance(SimDecodeInstance, UnifiedEngine):
+    """Unified mixed-batch instance (the Sarathi-style piggyback plane,
+    cost-model clocked).  Prompts are admitted RAW (remaining_prefill >
+    0) to the decode plane; each step carries the decode rows plus as
+    many pending prefill-chunk tokens as fit the leftover token budget
+    (`chunk − decode_rows`), priced by `CostModel.mixed_step_time` —
+    decode rows keep emitting every step, so prefill no longer stalls
+    them.
+
+    Starvation bound: when decode rows alone exhaust the budget for
+    `starve_limit` consecutive steps while prefill is pending, the next
+    step grants a minimum chunk (`chunk // 4`) anyway, so prefill can
+    lag but never be locked out.
+
+    `piggyback=False` is the DISJOINT ablation (the A/B baseline — the
+    prefill-prioritizing chunked loop Sarathi measures against): a step
+    with pending prefill runs ONLY the prefill chunk and the decode rows
+    stall through it, which is exactly the ITL-p99 bubble the unified
+    plane removes."""
+
+    def __init__(self, instance_id: int, dp_ids: Sequence[int],
+                 cost: Optional[CostModel], chunk: int = 3072,
+                 starve_limit: int = 4, piggyback: bool = True):
+        super().__init__(instance_id, dp_ids, cost)
+        self.chunk = max(int(chunk), 1)
+        self.starve_limit = max(int(starve_limit), 1)
+        self.piggyback = piggyback
+        self.prefilling: Dict[int, Deque[Request]] = {
+            d: collections.deque() for d in dp_ids}
+        self._starve: Dict[int, int] = {d: 0 for d in dp_ids}
+        self._grants: Dict[int, List[Tuple[Request, int]]] = {}
+        self._stalled: set = set()
+        self.prefill_tokens = 0
+        self.forced_grants = 0      # starvation-bound activations
+
+    # ------------------------------------------------------------------
+    def admit(self, dp_id: int, req: Request) -> None:
+        if req.remaining_prefill > 0:
+            self.prefilling[dp_id].append(req)
+        else:
+            super().admit(dp_id, req)
+
+    def has_work(self) -> bool:
+        return (super().has_work()
+                or any(self.prefilling[d] for d in self.dp_ids))
+
+    def prefill_backlog(self) -> int:
+        return sum(r.remaining_prefill for d in self.dp_ids
+                   for r in self.prefilling[d])
+
+    def drain(self) -> Dict[int, List[Request]]:
+        out = super().drain()
+        for d in self.dp_ids:
+            if self.prefilling[d]:
+                out.setdefault(d, []).extend(self.prefilling[d])
+                self.prefilling[d].clear()
+            self._starve[d] = 0
+        self._grants = {}
+        self._stalled = set()
+        return out
+
+    def preempt(self, rid: int) -> Optional[Request]:
+        got = super().preempt(rid)
+        if got is not None or self.busy:
+            return got
+        for d in self.dp_ids:
+            for r in self.prefilling[d]:
+                if r.rid == rid:
+                    self.prefilling[d].remove(r)
+                    return r
+        return None
+
+    # ------------------------------------------------------------------
+    def _form_grants(self, d: int, n_decode: int, now: float
+                     ) -> List[Tuple[Request, int]]:
+        """Fill the leftover token budget of DP `d` with pending prefill
+        chunks (FIFO).  Queue state is NOT mutated here — completions
+        are applied in finish_step, so an epoch-invalidating drain
+        mid-step loses nothing."""
+        q = self.prefilling[d]
+        if not q:
+            self._starve[d] = 0
+            return []
+        # disjoint ablation: prefill-prioritizing baseline — the full
+        # chunk budget every step, decode rows stall while it runs
+        budget = self.chunk - n_decode if self.piggyback else self.chunk
+        if budget <= 0:
+            self._starve[d] += 1
+            if self._starve[d] < self.starve_limit:
+                return []
+            budget = max(1, self.chunk // 4)    # forced minimum grant
+            self.forced_grants += 1
+        grants: List[Tuple[Request, int]] = []
+        for req in q:
+            if budget <= 0:
+                break
+            use = min(req.remaining_prefill, budget)
+            if req.prefill_start is None:
+                req.prefill_start = now
+            grants.append((req, use))
+            budget -= use
+        if grants:
+            self._starve[d] = 0
+        return grants
+
+    def start_step(self, dp_states, now: Optional[float] = None
+                   ) -> StartResult:
+        if self.busy or not self.has_work():
+            return None
+        by_id = {s.dp_id: s for s in dp_states}
+        self._grants = {}
+        self._stalled = set()
+        batches: List[int] = []
+        kvs: List[int] = []
+        ptoks: List[int] = []
+        for d in self.dp_ids:
+            n = len(self.running[d])
+            grants = self._form_grants(d, n, now if now is not None else 0.0)
+            p = sum(t for _, t in grants)
+            if grants:
+                self._grants[d] = grants
+            if grants and not self.piggyback and n:
+                # disjoint forced-prefill step: decode rows stall
+                self._stalled.add(d)
+                batches.append(0)
+                kvs.append(0)
+            else:
+                batches.append(n)
+                kvs.append(by_id[d].kv_occupancy if n else 0)
+            ptoks.append(p)
+        self.busy = True
+        self.steps += 1
+        return self.cost.mixed_step_time(batches, kvs, ptoks)
+
+    def finish_step(self, now: float, dp_states) -> List[Request]:
+        grants = self._grants
+        stalled = self._stalled
+        self._grants = {}
+        self._stalled = set()
+        by_id = {s.dp_id: s for s in dp_states}
+        # decode half: stalled DPs (disjoint forced-prefill steps) emit
+        # nothing — detach their rows so the parent pass skips them
+        saved = {d: self.running[d] for d in stalled}
+        for d in stalled:
+            self.running[d] = []
+        finished = super().finish_step(now, dp_states)
+        for d, rows in saved.items():
+            self.running[d] = rows + self.running[d]
+        # prefill half: apply granted chunk tokens; a completed prompt
+        # emits its first token (argmax of the chunk's last position on
+        # the real plane) and graduates to the decode rows
+        for d, lst in grants.items():
+            st = by_id[d]
+            q = self.prefilling[d]
+            for req, use in lst:
+                req.remaining_prefill -= use
+                self.prefill_tokens += use
+                if req.remaining_prefill > 0:
+                    continue
+                q.remove(req)
+                st.step(1)          # the emitted token's KV entry
+                req.generated += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                self._record_emit(req.rid, now)
+                if req.generated >= self._target_len(req):
+                    req.finish_time = now
+                    st.release(req.input_len + req.generated,
+                               reserve_len=req.input_len + req.output_len)
+                    self._last_emit.pop(req.rid, None)
+                    finished.append(req)
+                else:
+                    self.running[d].append(req)
         return finished

@@ -156,3 +156,36 @@ class DecodeEngine(abc.ABC):
     @abc.abstractmethod
     def drain(self) -> Dict[int, List[Request]]:
         """Watchdog path: strip all resident work off this instance."""
+
+
+class UnifiedEngine(DecodeEngine):
+    """One UNIFIED mixed-batch instance: a decode engine that also owns
+    its requests' chunked prefill, so prompts and decode rows share the
+    same engine step (Sarathi-style piggybacking — the plane that kills
+    the disjoint-loop decode stall).
+
+    Contract deltas vs a plain DecodeEngine:
+
+      * `admit` additionally accepts RAW requests (remaining_prefill >
+        0, no published generation state).  The engine stages them as
+        prefilling residents — KV pages reserved for the full lifetime
+        up front — and runs their chunks out of the leftover per-step
+        token budget (`chunk − decode_rows`) of the SAME forward the
+        decode rows run in.  Completing the prompt emits the first
+        token from inside the step; the request then graduates to the
+        decode rows without any KV handoff (same pool, same DP).
+      * STARVATION BOUND: when decode rows exhaust the budget for
+        `starve_limit` consecutive steps while prefill is pending, the
+        next step grants a minimum chunk regardless of decode load —
+        prefill may lag, never be locked out.
+      * A unified deployment runs DECODE-PLANE-ONLY under the runtime
+        (`psched=None`): arrivals hand off directly to the decode
+        scheduler, and `immediate`/`sbs`/`sbs-la` drive it unchanged.
+
+    Both backends implement this: `SimUnifiedInstance` (cost-model
+    clocked, `CostModel.mixed_step_time`) and `RealUnifiedEngine`
+    (jitted `mixed_step`, paged cache only)."""
+
+    def prefill_backlog(self) -> int:
+        """Prompt tokens still to be prefilled across all DPs."""
+        return 0

@@ -57,6 +57,7 @@ while a pass/step is in flight.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -70,15 +71,15 @@ from repro.config.base import ModelConfig
 from repro.core.types import DispatchCommand, Request, RequestPhase
 from repro.models.model import (
     _require_pageable_prefill, cache_join, cache_take, decode_step,
-    init_cache, init_paged_cache, paged_adopt_blocks, paged_cache_clear_slot,
-    paged_cache_join, paged_cache_take, paged_clear_rows, paged_copy_block,
-    paged_decode_step, paged_gather_blocks, paged_layout, paged_prefill_step,
-    prefill_chunk,
+    init_cache, init_paged_cache, mixed_step, paged_adopt_blocks,
+    paged_cache_clear_slot, paged_cache_join, paged_cache_take,
+    paged_clear_rows, paged_copy_block, paged_decode_step,
+    paged_gather_blocks, paged_layout, paged_prefill_step, prefill_chunk,
 )
 from repro.serving.engine import SimDecodeInstance, SimPrefillInstance
 from repro.serving.kv_pool import BlockPool, pad_block_table
 from repro.serving.page_share import PagePrefixBinder
-from repro.serving.plane import ASYNC, PassResult, StartResult
+from repro.serving.plane import ASYNC, PassResult, StartResult, UnifiedEngine
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +138,12 @@ class EngineSpec:
             self.jit_copy_block = jax.jit(
                 lambda c, src, dst: paged_copy_block(cfg, c, src, dst))
             self.jit_clear_rows = jax.jit(paged_clear_rows)
+            # unified mixed-batch step (decode rows + piggybacked prefill
+            # chunks in one XLA program): retraces per (n_chunks, chunk
+            # lengths) combination — slots and masks are traced
+            self.jit_mixed = jax.jit(
+                lambda p, t, c, chunks, mask: mixed_step(cfg, p, t, c,
+                                                         chunks, mask))
 
     @property
     def paged(self) -> bool:
@@ -1006,4 +1013,327 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         self._deferred.clear()
         self._participants = {}
         self._result = None
+        return out
+
+# ---------------------------------------------------------------------------
+# Real unified mixed-batch engine
+# ---------------------------------------------------------------------------
+
+
+class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
+    """Unified mixed-batch engine (paged only): one pool, one step loop.
+
+    Raw requests (no published generation state) are staged as
+    PREFILLING RESIDENTS at join time: their lifetime pages are reserved
+    and their table row installed with `cur = 0`, exactly like
+    `RealPrefillEngine._stage` — but into the DECODE pool, so no KV
+    handoff ever happens.  Each step then runs `mixed_step`: the decode
+    rows' batched forward plus as many pending prefill-chunk tokens as
+    fit the leftover budget (`chunk − decode_rows`), in ONE XLA program.
+    The decode half is MASKED to the actively-decoding slots — a
+    prefilling resident's table row is live, so an unmasked decode would
+    scribble a garbage token into its pages and bump its cursor.
+
+    Chunk grants are quantized to `block_size` multiples (except a
+    prompt's final chunk) to bound jit retraces; the starvation bound
+    (`starve_limit`) forces a minimum grant when decode rows hog the
+    budget.  `piggyback=False` is the DISJOINT ablation (the
+    prefill-prioritizing chunked loop Sarathi measures against): a step
+    with pending prefill runs ONLY the prefill chunk while the decode
+    rows stall — the ITL bubble the unified plane exists to remove."""
+
+    def __init__(self, instance_id: int, dp_ids: Sequence[int],
+                 spec: EngineSpec, bus: KVHandoffBus, chunk: int = 256,
+                 starve_limit: int = 4, piggyback: bool = True,
+                 share_prefix: bool = False):
+        if not spec.paged:
+            raise ValueError(
+                "the unified mixed-batch engine requires block_size > 0 "
+                "(prefill chunks ride paged_prefill_step into the pool)")
+        _require_pageable_prefill(spec.cfg)
+        super().__init__(instance_id, dp_ids, spec, bus,
+                         share_prefix=share_prefix)
+        self.chunk = max(int(chunk), 1)
+        self.starve_limit = max(int(starve_limit), 1)
+        self.piggyback = piggyback
+        self.prefilling: Dict[int, "collections.deque[Request]"] = {
+            d: collections.deque() for d in dp_ids}
+        self._consumed: Dict[int, int] = {}       # rid -> prompt tokens done
+        self._starve: Dict[int, int] = {d: 0 for d in dp_ids}
+        self._grants: Dict[int, List[Tuple[Request, int]]] = {}
+        self._chunk_result: Optional[Dict[int, List[int]]] = None
+        self._stalled: set = set()
+        self.prefill_tokens = 0
+        self.forced_grants = 0      # starvation-bound activations
+        self.mixed_steps = 0        # steps that ran decode+prefill fused
+
+    # -- EnginePlane -----------------------------------------------------
+    def has_work(self) -> bool:
+        return (super().has_work()
+                or any(self.prefilling[d] for d in self.dp_ids))
+
+    def prefill_backlog(self) -> int:
+        return sum(r.input_len - self._consumed[r.rid]
+                   for d in self.dp_ids for r in self.prefilling[d])
+
+    def _apply_joins(self, now: float, dp_states) -> None:
+        # handed-off requests (drain re-parks, preemption re-admits) ride
+        # the parent join path; RAW requests — no transferred KV on the
+        # bus — stage as prefilling residents.  A bus entry WITHOUT a
+        # cache is one this plane published itself (unified prefill
+        # completions set gen.cache = None), e.g. a re-served rid from a
+        # previous run on the same deployment: still raw
+        raw: List[Tuple[int, Request]] = []
+        rest: List[Tuple[int, Request]] = []
+        for item in self._pending:
+            gen = self.bus.get(item[1].rid)
+            (raw if gen is None or gen.cache is None else rest).append(item)
+        self._pending = rest
+        super()._apply_joins(now, dp_states)
+        still: List[Tuple[int, Request]] = []
+        for dp_id, req in raw:
+            st = self._dp[dp_id]
+            life = self.spec.lifetime_tokens(req)
+            if not st.can_admit(life):
+                self._deferred.add(req.rid)
+                still.append((dp_id, req))
+                continue
+            self._deferred.discard(req.rid)
+            slot = st.free_slot()
+            if st.cache is None:
+                st.cache = self.spec.paged_cache()
+            ids = st.pool.alloc(st.pool.blocks_for(life))
+            st.held[req.rid] = ids
+            arr = jnp.asarray(pad_block_table(ids, self.spec.nbt), jnp.int32)
+            # reused pages keep their previous tenant's kv_pos; stale
+            # pos <= the reader's cursor would alias as valid history
+            st.cache = self.spec.jit_clear_rows(st.cache, arr)
+            st.cache = dict(st.cache)
+            st.cache["block_tab"] = st.cache["block_tab"].at[slot].set(arr)
+            st.cache["cur"] = st.cache["cur"].at[slot].set(0)
+            st.slots[slot] = req
+            self._slot_of[req.rid] = (dp_id, slot)
+            self._consumed[req.rid] = 0
+            self.prefilling[dp_id].append(req)
+            self.peak_resident = max(self.peak_resident, len(self._slot_of))
+        self._pending.extend(still)
+
+    # -- budget split ----------------------------------------------------
+    def _form_grants(self, d: int, n_decode: int, now: float
+                     ) -> List[Tuple[Request, int]]:
+        q = self.prefilling[d]
+        if not q:
+            self._starve[d] = 0
+            return []
+        # disjoint ablation: prefill-prioritizing baseline — the full
+        # chunk budget every step, decode rows stall while it runs
+        budget = self.chunk - n_decode if self.piggyback else self.chunk
+        if budget <= 0:
+            self._starve[d] += 1
+            if self._starve[d] < self.starve_limit:
+                return []
+            budget = max(1, self.chunk // 4)    # forced minimum grant
+            self.forced_grants += 1
+        bs = self.spec.block_size
+        grants: List[Tuple[Request, int]] = []
+        for req in q:
+            if budget <= 0:
+                break
+            remaining = req.input_len - self._consumed[req.rid]
+            use = min(remaining, budget)
+            if use < remaining:
+                # partial chunks land on block boundaries: bounds jit
+                # retraces to block-multiple shapes + final-chunk shapes
+                use = (use // bs) * bs
+                if use <= 0:
+                    break
+            if req.prefill_start is None:
+                req.prefill_start = now
+            grants.append((req, use))
+            budget -= use
+            # one chunk per DP per step: each extra chunk in the tuple
+            # multiplies the jit_mixed shape lattice (every combination
+            # of chunk lengths is a fresh trace), and a single grant
+            # keeps prefill FIFO anyway — leftover budget just waits a
+            # step
+            break
+        if grants:
+            self._starve[d] = 0
+        return grants
+
+    def start_step(self, dp_states, now: Optional[float] = None
+                   ) -> StartResult:
+        self._raise_worker_error()
+        if self.busy:
+            return None
+        if self._pending:
+            self._apply_joins(now if now is not None else 0.0, dp_states)
+        if not (SimDecodeInstance.has_work(self)
+                or any(self.prefilling[d] for d in self.dp_ids)):
+            return None
+        tnow = now if now is not None else 0.0
+        jobs: List[Tuple[int, Dict, Optional[jnp.ndarray], tuple,
+                         Optional[jnp.ndarray]]] = []
+        self._participants = {}
+        self._grants = {}
+        self._stalled = set()
+        for d in self.dp_ids:
+            st = self._dp[d]
+            rows = self.running[d]
+            grants = self._form_grants(d, len(rows), tnow)
+            if grants:
+                self._grants[d] = grants
+            stall = bool(grants) and not self.piggyback and bool(rows)
+            if stall:
+                self._stalled.add(d)
+            decode_rows = [] if stall else rows
+            if not decode_rows and not grants:
+                continue
+            chunks = []
+            for req, use in grants:
+                c0 = self._consumed[req.rid]
+                ids = list((req.tokens or ())[c0: c0 + use])
+                chunks.append((jnp.asarray([ids], jnp.int32),
+                               jnp.int32(self._slot_of[req.rid][1])))
+            toks = mask = None
+            if decode_rows:
+                self._participants[d] = [
+                    (r, self._slot_of[r.rid][1]) for r in decode_rows]
+                toks = jnp.asarray([[t] for t in st.next_tok], jnp.int32)
+                if chunks or self.prefilling[d]:
+                    # prefilling residents have LIVE table rows: mask the
+                    # decode half to the actively-decoding slots
+                    m = [False] * len(st.slots)
+                    for _r, s in self._participants[d]:
+                        m[s] = True
+                    mask = jnp.asarray(m)
+            jobs.append((d, st.cache, toks, tuple(chunks), mask))
+        if not jobs:
+            return None
+        self.busy = True
+        self.steps += 1
+        epoch = self.epoch
+        post = self._post
+        self._worker.submit(lambda: self._exec_mixed(jobs, epoch, post))
+        return ASYNC
+
+    def _exec_mixed(self, jobs, epoch: int, post) -> None:
+        # worker thread: one fused mixed step per DP with decode rows
+        # (masked when prefilling residents share the cache), a plain
+        # paged decode when nothing is prefilling, a serial chunk loop
+        # when nothing is decoding
+        t0 = time.monotonic()
+        try:
+            res: Dict[int, Tuple[Dict, List[int]]] = {}
+            cres: Dict[int, List[int]] = {}
+            for dp_id, cache, toks, chunks, mask in jobs:
+                if toks is None:
+                    new_cache = cache
+                    clogits = []
+                    for ctoks, slot in chunks:
+                        lg, new_cache = self.spec.jit_paged_prefill(
+                            self.spec.params, ctoks, new_cache, slot)
+                        clogits.append(lg)
+                    nxt: List[int] = []
+                elif mask is not None:
+                    logits, clogits, new_cache = self.spec.jit_mixed(
+                        self.spec.params, toks, cache, chunks, mask)
+                    if chunks:
+                        self.mixed_steps += 1
+                    nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                else:
+                    logits, new_cache = self.spec.jit_paged_decode(
+                        self.spec.params, toks, cache)
+                    clogits = ()
+                    nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                res[dp_id] = (new_cache, nxt)
+                cres[dp_id] = [int(jnp.argmax(lg[0])) for lg in clogits]
+            self._result = res
+            self._chunk_result = cres
+        except BaseException as e:      # surface on the runtime thread
+            self._error = e
+        post("step_end", (self, epoch, time.monotonic() - t0))
+
+    def finish_step(self, now: float, dp_states) -> List[Request]:
+        cres = self._chunk_result or {}
+        self._chunk_result = None
+        grants, self._grants = self._grants, {}
+        stalled, self._stalled = self._stalled, set()
+        by_id = {s.dp_id: s for s in dp_states}
+        # disjoint-stall steps: detach the stalled DPs' rows so the
+        # parent pass emits nothing for them (that stall IS the ablation)
+        saved = {d: self.running[d] for d in stalled}
+        for d in stalled:
+            self.running[d] = []
+        finished = super().finish_step(now, dp_states)
+        for d, rows in saved.items():
+            self.running[d] = rows + self.running[d]
+        # prefill half: account granted tokens; a completed prompt
+        # publishes its first token (argmax of the chunk's last position)
+        # and graduates to the decode rows — no handoff, same pool
+        for d, lst in grants.items():
+            st = self._dp[d]
+            sched = by_id[d]
+            firsts = cres.get(d, [])
+            q = self.prefilling[d]
+            for i, (req, use) in enumerate(lst):
+                self._consumed[req.rid] += use
+                req.remaining_prefill = max(
+                    req.input_len - self._consumed[req.rid], 0)
+                self.prefill_tokens += use
+                if self._consumed[req.rid] < req.input_len:
+                    continue
+                first = firsts[i]
+                q.remove(req)
+                del self._consumed[req.rid]
+                gen = self.bus.publish(req.rid, None, first)
+                gen.cache = None            # resident already — no payload
+                sched.step(1)               # the emitted token's KV entry
+                req.generated += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                self._record_emit(req.rid, now)
+                slot = self._slot_of[req.rid][1]
+                if req.generated >= self._target_len(req):
+                    req.finish_time = now
+                    sched.release(req.input_len + req.generated,
+                                  reserve_len=req.input_len + req.output_len)
+                    self._last_emit.pop(req.rid, None)
+                    self._slot_of.pop(req.rid)
+                    st.cache = paged_cache_clear_slot(st.cache, slot)
+                    st.slots[slot] = None
+                    st.pool.free(st.held.pop(req.rid))
+                    finished.append(req)
+                else:
+                    st.next_tok[slot] = first
+                    self.running[d].append(req)
+        return finished
+
+    def drain(self) -> Dict[int, List[Request]]:
+        # prefilling residents have no parked generation state: drop
+        # their partial KV (pages back to the pool) and restart prefill
+        # wherever re-dispatch lands them
+        pre: Dict[int, List[Request]] = {}
+        for d in self.dp_ids:
+            q = self.prefilling[d]
+            if not q:
+                self._starve[d] = 0
+                continue
+            pre[d] = list(q)
+            q.clear()
+            st = self._dp[d]
+            for req in pre[d]:
+                _dp, slot = self._slot_of.pop(req.rid)
+                st.cache = paged_cache_clear_slot(st.cache, slot)
+                st.slots[slot] = None
+                st.pool.free(st.held.pop(req.rid))
+                del self._consumed[req.rid]
+                req.remaining_prefill = req.input_len
+            self._starve[d] = 0
+        out = super().drain()
+        for d, reqs in pre.items():
+            out.setdefault(d, []).extend(reqs)
+        self._grants = {}
+        self._chunk_result = None
+        self._stalled = set()
         return out

@@ -39,6 +39,7 @@ from repro.serving.cluster import (
 from repro.serving.page_share import EngineBackedPrefixIndex
 from repro.serving.real_engine import (
     EngineSpec, KVHandoffBus, RealDecodeEngine, RealPrefillEngine,
+    RealUnifiedEngine,
 )
 from repro.serving.runtime import ClusterRuntime
 
@@ -78,13 +79,18 @@ class RealSBSServer:
         scfg = serving_cfg or _default_serving_config()
         self.scfg = scfg
         self.state = build_state(scfg)
-        if scheduler in ("sbs", "sbs-la"):
-            self.sched = build_prefill_scheduler(self.state, scfg, "sbs")
+        if scheduler not in ("sbs", "sbs-la", "immediate"):
+            raise ValueError(scheduler)
+        if scfg.mixed_batch:
+            # unified mixed-batch plane: decode-pool-only deployment —
+            # no prefill engines, no KV handoff; RealUnifiedEngine runs
+            # chunked prefill inside its own (paged) decode steps
+            self.sched = None
         elif scheduler == "immediate":
             self.sched = build_prefill_scheduler(self.state, scfg,
                                                  "immediate-rr")
         else:
-            raise ValueError(scheduler)
+            self.sched = build_prefill_scheduler(self.state, scfg, "sbs")
         self.dsched = build_decode_scheduler(
             self.state, scfg, scheduler,
             watchdog_multiplier=watchdog_multiplier,
@@ -114,9 +120,14 @@ class RealSBSServer:
                 "prefix_cache=True needs a paged deployment "
                 "(ServingConfig.block_size > 0) and an attention-only "
                 "decoder-only model config")
-        share_prefill = self.prefix_cache and scheduler in ("sbs", "sbs-la")
+        if scfg.mixed_batch and not self.spec.paged:
+            raise ValueError(
+                "mixed_batch=True needs a paged deployment "
+                "(ServingConfig.block_size > 0)")
+        share_prefill = (self.prefix_cache and not scfg.mixed_batch
+                         and scheduler in ("sbs", "sbs-la"))
         self.bus = KVHandoffBus()
-        self.engines = [
+        self.engines = [] if scfg.mixed_batch else [
             RealPrefillEngine(
                 i, [d.dp_id for d in self.state.prefill_dps_of(i)],
                 scfg.chunk_size, self.spec, self.bus,
@@ -132,19 +143,31 @@ class RealSBSServer:
                 for d in self.state.prefill_dps_of(i):
                     binder_of[d.dp_id] = eng.binder
             self.sched.cache = EngineBackedPrefixIndex(binder_of)
-        self.decode_engines = [
-            RealDecodeEngine(
-                i, [d.dp_id for d in self.state.decode_dps_of(i)],
-                self.spec, self.bus, share_prefix=self.prefix_cache)
-            for i in range(scfg.num_decode_instances)]
+        if scfg.mixed_batch:
+            self.decode_engines = [
+                RealUnifiedEngine(
+                    i, [d.dp_id for d in self.state.decode_dps_of(i)],
+                    self.spec, self.bus,
+                    chunk=scfg.resolved_mixed_chunk,
+                    starve_limit=scfg.prefill_starve_limit,
+                    piggyback=scfg.mixed_piggyback,
+                    share_prefix=self.prefix_cache)
+                for i in range(scfg.num_decode_instances)]
+        else:
+            self.decode_engines = [
+                RealDecodeEngine(
+                    i, [d.dp_id for d in self.state.decode_dps_of(i)],
+                    self.spec, self.bus, share_prefix=self.prefix_cache)
+                for i in range(scfg.num_decode_instances)]
         flow = (FlowController(n_limit=scfg.n_limit,
                                backoff_base=scfg.flow_backoff)
                 if scfg.flow_control else None)
         self.runtime = ClusterRuntime(
             self.state, prefill_sched=self.sched,
-            prefill_instances=self.engines,
+            prefill_instances=self.engines or None,
             decode_sched=self.dsched, decode_instances=self.decode_engines,
-            transfer_time=lambda r: scfg.l_net,     # P/D transfer latency
+            transfer_time=(None if scfg.mixed_batch
+                           else lambda r: scfg.l_net),  # P/D transfer
             realtime=True,
             flow=flow, preemption=scfg.preemption)
 

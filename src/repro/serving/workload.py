@@ -6,6 +6,10 @@
 - bursty:     short lengths under a Markov-modulated Poisson process —
               on/off arrival bursts with the same long-run rate (flash
               crowds; stresses the staggered clock and flow control)
+- decode_burst: decode-heavy bursty — long generations keep every DP
+              populated while MMPP prompt bursts arrive on top (the
+              mixed-batch ITL scenario: disjoint prefill stalls the
+              resident decode rows, piggybacking does not)
 - heavy_tail: long-context heavy-tail (lognormal σ=1.6, up to 128K) —
               a few huge documents amid chat traffic (stresses chunking
               and KV-load balance)
@@ -76,6 +80,15 @@ HEAVY_TAIL = WorkloadSpec("heavy_tail", 64, 131072, 2500.0, sigma=1.6)
 SHARED_PREFIX = WorkloadSpec("shared_prefix", 256, 3000, 1000.0,
                              n_tenants=24, tenant_zipf=1.2,
                              tenant_prefix_len=384)
+# decode-heavy bursty traffic: long generations keep every decode DP
+# populated while MMPP prompt bursts arrive on top — each burst's prefill
+# must run WHILE decodes are resident, which is exactly where a disjoint
+# prefill/decode loop stalls the resident rows (the ITL-p99 bubble the
+# unified mixed-batch plane removes)
+DECODE_BURST = WorkloadSpec("decode_burst", 512, 8000, 2500.0,
+                            out_mean=600,
+                            burst_factor=4.0, burst_duty=0.2,
+                            burst_period=3.0)
 _CLASS_MIX = {"interactive": 0.35, "standard": 0.45, "batch": 0.20}
 OVERLOAD_SPIKE = WorkloadSpec("overload_spike", 16, 3000, 1000.0,
                               out_mean=300,
@@ -86,7 +99,8 @@ DIURNAL = WorkloadSpec("diurnal", 16, 3000, 1000.0, out_mean=300,
                        class_mix=_CLASS_MIX)
 
 SPECS = {"short": SHORT, "long": LONG, "decode": DECODE,
-         "bursty": BURSTY, "heavy_tail": HEAVY_TAIL,
+         "bursty": BURSTY, "decode_burst": DECODE_BURST,
+         "heavy_tail": HEAVY_TAIL,
          "shared_prefix": SHARED_PREFIX,
          "overload_spike": OVERLOAD_SPIKE, "diurnal": DIURNAL}
 

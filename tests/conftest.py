@@ -20,6 +20,10 @@ def pytest_configure(config):
         "allocator/cache-surgery property tests run in the fast tier "
         "(scripts/ci.sh); the heavyweight cross-plane equivalence sweep "
         "is additionally @slow and only runs under --full")
+    config.addinivalue_line(
+        "markers", "mixed: unified mixed-batch plane suite (Sarathi-style "
+        "piggybacking + length-bucketed formation) — runs FIRST in the "
+        "fast tier (scripts/ci.sh), before the paged suite")
 
 
 # ---------------------------------------------------------------------------
