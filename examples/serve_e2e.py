@@ -40,12 +40,32 @@ steps vs the disjoint (prefill-prioritizing, rows stall) ablation.
 Requires piggybacking to post a strictly lower ITL p99 at
 equal-or-higher throughput, and records both sides in the payload's
 `real_plane_mixed` section.
+
+`--sharded-bench` runs the sharded DP+EP A/B instead: the deployment is
+MESH-NATIVE (4 decode DP units merged into one cache sharded over a
+4-device forced-host mesh, every step a cross-DP program with the
+explicit EP all-to-all live), served under immediate dispatch vs SBS
+staggered batch formation.  Requires sbs-la to post a strictly lower
+TTFT p99 at equal-or-higher throughput, records per-step sync stall and
+the measured per-step sync cost that calibrates `CostModel.t_sync`, and
+writes the payload's `real_plane_sharded` section.  Use the granite MoE
+config (`--arch granite-moe-1b-a400m`) so the expert count divides the
+mesh.
 """
 import argparse
 import json
 import os
 import random
 import sys
+
+# --sharded-bench serves on a 4-device forced-host mesh; the device
+# count must be pinned BEFORE the first jax import (the same bootstrap
+# launch/dryrun.py uses), so peek at argv here
+if ("--sharded-bench" in sys.argv
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 
@@ -451,6 +471,208 @@ def run_mixed_bench(cfg, params, args):
     return ok, section
 
 
+def _measure_step_sync(spec_sh, spec_lo, reps=20):
+    """Per-step DP sync cost, measured: wall time of the merged sharded
+    decode step (mesh collectives + EP all-to-all over every DP's rows)
+    minus the equivalent single-device per-DP step.  The minimum over
+    `reps` filters scheduler noise; the difference is what one cross-DP
+    barrier actually charges — the number `CostModel.t_sync` hardcodes
+    as 4ms."""
+    import time
+
+    import jax.numpy as jnp
+
+    def best(spec, cache):
+        toks = jnp.zeros((cache["cur"].shape[0], 1), jnp.int32)
+        out = spec.jit_paged_decode(spec.params, toks, cache)  # compile
+        jax.block_until_ready(out[0])
+        t = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = spec.jit_paged_decode(spec.params, toks, cache)
+            jax.block_until_ready(out[0])
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    t_sh = best(spec_sh, spec_sh.merged_paged_cache())
+    t_lo = best(spec_lo, spec_lo.paged_cache())
+    return max(t_sh - t_lo, 0.0), t_sh, t_lo
+
+
+def run_sharded_bench(cfg, params, args):
+    """Sharded DP+EP A/B on the real plane: the SAME trace served by a
+    mesh-native deployment — 4 decode DP units merged into ONE cache
+    sharded over a 4-device (forced host) mesh, every engine step a
+    cross-DP program with the explicit EP all-to-all active — under
+    immediate dispatch vs SBS staggered batch formation.  Returns
+    (ok, report-section).
+
+    A BURST of alternating long (144) and short (16) prompts, so
+    immediate-rr's count-based round-robin piles every long prompt on
+    one prefill instance while SBS's capacity-argmax batch formation
+    balances token load — the cross-DP skew the paper's Load-Aware
+    allocation targets.  Immediate's trickled handoffs additionally join
+    decode one by one, so the merged plane runs many LOW-OCCUPANCY
+    full-mesh steps (each paying the whole collective program for a few
+    live rows) that contend with prefill for the one mesh; aligned
+    formation joins in waves — visibly lower sync-stall integral and
+    higher step occupancy.  Gate: sbs-la must post strictly lower TTFT
+    p99 at equal-or-higher throughput (5% tolerance; latencies are
+    medians of five timed serves, throughput the best serve — makespan
+    noise is one-sided).  The section also records the per-step sync-stall
+    integral Σ dur·(1 − active/rows) from the engines' step samples and
+    the measured per-step sync cost that calibrates
+    `CostModel.t_sync`."""
+    import dataclasses
+
+    from repro.launch.mesh import make_engine_mesh
+    from repro.serving.costmodel import CostModel
+    from repro.serving.metrics import percentile
+
+    n_dp = 4
+    if len(jax.devices()) < n_dp:
+        print(f"sharded bench needs {n_dp} devices (forced host), have "
+              f"{len(jax.devices())} — run via --sharded-bench in a fresh "
+              f"process so the XLA_FLAGS bootstrap applies")
+        return False, {}
+    bs = args.block_size or 16
+    mesh = make_engine_mesh(n_dp)
+    long_in, short_in, out = 144, 16, 16     # lifetime 160 == max_len
+    scfg = ServingConfig(
+        num_prefill_instances=2, prefill_dp_per_instance=1,
+        num_decode_instances=1, decode_dp_per_instance=n_dp,
+        chunk_size=64, t_default=0.02, l_net=0.001,
+        max_batch_per_dp=2, block_size=bs,
+        # the burst IS the experiment: keep PBAA's overload detection
+        # from shedding it (n_limit counts waiting cycles before a
+        # request is rejected)
+        n_limit=1000)
+    rng = random.Random(args.seed)
+    lens = [long_in if i % 2 == 0 else short_in for i in range(16)]
+    toks = [tuple(rng.randrange(cfg.vocab_size) for _ in range(L))
+            for L in lens]
+    # the A/B needs a BURST: with arrivals spread wider than a prompt's
+    # service time there is no queueing, so formation policy cannot
+    # matter and SBS only pays its dispatch-interval wait
+    spacing = min(args.arrival_spacing, 0.005)
+
+    def fresh():
+        return [Request(rid=i, arrival_time=i * spacing,
+                        input_len=lens[i], output_len=out, tokens=toks[i])
+                for i in range(len(lens))]
+
+    spec = EngineSpec(cfg, params, max_len=MAX_LEN,
+                      max_batch=scfg.max_batch_per_dp, max_new=out,
+                      block_size=bs, decode_slots=scfg.resolved_decode_slots,
+                      mesh=mesh)
+    spec_lo = EngineSpec(cfg, params, max_len=MAX_LEN,
+                         max_batch=scfg.max_batch_per_dp, max_new=out,
+                         block_size=bs,
+                         decode_slots=scfg.resolved_decode_slots)
+    # hard evidence the EP shard_map path is live: the compiled merged
+    # step must contain the explicit all-to-all
+    probe = spec.merged_paged_cache()
+    import jax.numpy as jnp
+    hlo = spec.jit_paged_decode.lower(
+        spec.params, jnp.zeros((probe["cur"].shape[0], 1), jnp.int32),
+        probe).compile().as_text()
+    ep_active = "all-to-all" in hlo
+    t_sync, t_sh, t_lo = _measure_step_sync(spec, spec_lo)
+    cost = CostModel(cfg).with_measured_sync(t_sync)
+    print(f"\n#### sharded DP+EP A/B: {len(lens)} requests "
+          f"({long_in}/{short_in} alternating, {out} out) on a "
+          f"{n_dp}-device data mesh, merged decode cache "
+          f"{n_dp}x{spec.paged_slots} rows, block_size={bs}, "
+          f"EP all-to-all in step HLO: {ep_active}")
+    print(f"  measured per-step sync: sharded={t_sh*1000:.2f}ms "
+          f"local={t_lo*1000:.2f}ms -> t_sync={t_sync*1000:.2f}ms "
+          f"(CostModel default {CostModel(cfg).t_sync*1000:.1f}ms)")
+    ok = ep_active
+    section = {
+        "block_size": bs, "n_dp": n_dp, "requests": len(lens),
+        "ep_all_to_all_active": ep_active,
+        "t_sync_measured_ms": t_sync * 1000,
+        "t_step_sharded_ms": t_sh * 1000,
+        "t_step_local_ms": t_lo * 1000,
+        "t_sync_calibrated_costmodel_ms": cost.t_sync * 1000,
+    }
+    for sched in ("immediate", "sbs-la"):
+        srv = RealSBSServer(cfg, params, serving_cfg=scfg, scheduler=sched,
+                            max_len=MAX_LEN, max_new=out, spec=spec,
+                            mesh=mesh)
+        # warmup serve of the same trace: burns every jitted shape this
+        # leg hits and warm-starts the adaptive interval
+        srv.serve(fresh(), timeout=args.timeout)
+        samples = []
+        for _ in range(5):
+            for e in srv.decode_engines:
+                e.step_samples.clear()
+            reqs = fresh()
+            gens = srv.serve(reqs, timeout=args.timeout)
+            if len(gens) < len(reqs):
+                missing = sorted(set(r.rid for r in reqs)
+                                 - set(g.rid for g in gens))
+                print(f"  {sched}: UNFINISHED rids {missing}")
+                ok = False
+                break
+            ttfts = [g.ttft for g in gens]
+            total = sum(r.generated for r in reqs)
+            span = max((r.finish_time for r in reqs
+                        if r.finish_time is not None), default=0.0)
+            stall = sum(d * (1 - a / r)
+                        for e in srv.decode_engines
+                        for d, a, r in e.step_samples if r)
+            steps = sum(len(e.step_samples) for e in srv.decode_engines)
+            occ = (sum(a / r for e in srv.decode_engines
+                       for d, a, r in e.step_samples if r)
+                   / max(steps, 1))
+            samples.append({
+                "ttft_p99": percentile(ttfts, 99) if ttfts else 0.0,
+                "ttft_mean": sum(ttfts) / max(len(ttfts), 1),
+                "throughput": total / span if span > 0 else 0.0,
+                "sync_stall_ms": stall * 1000,
+                "decode_steps": steps,
+                "mean_occupancy": occ,
+            })
+        if not samples:
+            continue
+        med = {k: sorted(s[k] for s in samples)[len(samples) // 2]
+               for k in samples[0]}
+        # throughput = tokens / burst makespan, and the makespan is a
+        # MAX over requests — host jitter (GC, CPU contention) can only
+        # inflate it, never shrink it, so a serve's throughput is
+        # noise-depressed one-sidedly.  The max over serves is the
+        # stable estimator of sustained capability; both legs get the
+        # same treatment (latency metrics stay medians).
+        med["throughput"] = max(s["throughput"] for s in samples)
+        med["runs"] = len(samples)
+        section[sched] = med
+        print(f"  {sched:>9}: ttft_p99={med['ttft_p99']*1000:7.1f}ms "
+              f"mean={med['ttft_mean']*1000:7.1f}ms "
+              f"thr={med['throughput']:6.1f} tok/s "
+              f"stall={med['sync_stall_ms']:7.1f}ms "
+              f"steps={med['decode_steps']} "
+              f"occ={med['mean_occupancy']*100:5.1f}%")
+    if ok and "immediate" in section and "sbs-la" in section:
+        i, s = section["immediate"], section["sbs-la"]
+        if not (s["ttft_p99"] < i["ttft_p99"]
+                and s["throughput"] >= 0.95 * i["throughput"]):
+            print("  sharded gate FAILED: need sbs-la ttft_p99 strictly "
+                  "below immediate at equal-or-higher throughput "
+                  "(5% tolerance)")
+            ok = False
+        else:
+            dstall = ((1 - s["sync_stall_ms"] / i["sync_stall_ms"]) * 100
+                      if i["sync_stall_ms"] else 0.0)
+            print(f"  gate OK: ttft_p99 "
+                  f"{(1 - s['ttft_p99'] / i['ttft_p99']) * 100:+.1f}% "
+                  f"thr {(s['throughput'] / i['throughput'] - 1) * 100:+.1f}%"
+                  f" stall {dstall:+.1f}% vs immediate")
+    elif ok:
+        ok = False
+    return ok, section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -485,6 +707,11 @@ def main():
                     help="run the unified mixed-batch A/B (piggybacked "
                          "chunked prefill vs the disjoint stall-the-rows "
                          "ablation) instead of the scheduler sweep")
+    ap.add_argument("--sharded-bench", action="store_true",
+                    help="run the sharded DP+EP A/B (merged decode cache "
+                         "on a 4-device forced-host mesh, EP all-to-all "
+                         "live; immediate vs sbs-la) instead of the "
+                         "scheduler sweep")
     args = ap.parse_args()
     if args.compare_padded and not args.block_size:
         ap.error("--compare-padded needs a paged plane (--block-size > 0); "
@@ -494,13 +721,17 @@ def main():
     cfg = get_arch(args.arch, reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    if args.prefix_bench or args.overload_bench or args.mixed_bench:
+    if (args.prefix_bench or args.overload_bench or args.mixed_bench
+            or args.sharded_bench):
         if args.prefix_bench:
             key, (ok, section) = ("real_plane_prefix",
                                   run_prefix_bench(cfg, params, args))
         elif args.overload_bench:
             key, (ok, section) = ("real_plane_overload",
                                   run_overload_bench(cfg, params, args))
+        elif args.sharded_bench:
+            key, (ok, section) = ("real_plane_sharded",
+                                  run_sharded_bench(cfg, params, args))
         else:
             key, (ok, section) = ("real_plane_mixed",
                                   run_mixed_bench(cfg, params, args))

@@ -18,6 +18,10 @@ serve is a regression, not a tuning choice.  Rows with a positive
 baseline `itl_p99` (inter-token latency, recorded since the unified
 mixed-batch plane) fail on an ITL-p99 inflation beyond the threshold —
 decode smoothness is the metric piggybacked prefill exists to protect.
+Rows with a positive baseline `sync_stall_ms` (the sharded DP+EP A/B,
+`real_plane_sharded`) fail on a stall-integral inflation beyond the
+threshold — per-step cross-DP sync stall is the quantity aligned batch
+formation exists to cut, so its regression is judged alongside TTFT.
 The sims are deterministic, so the threshold guards real
 scheduling/cost-model regressions, not noise — but --quick baselines
 must be compared against --quick runs.
@@ -114,6 +118,11 @@ def main() -> int:
             hit_note += f" itl x{itl_ratio:.3f}"
             if itl_ratio > 1.0 + args.threshold:
                 verdicts.append(f"itl_p99 {itl_ratio - 1:+.1%}")
+        if b.get("sync_stall_ms", 0.0) > 0.0:
+            stall_ratio = f_.get("sync_stall_ms", 0.0) / b["sync_stall_ms"]
+            hit_note += f" stall x{stall_ratio:.3f}"
+            if stall_ratio > 1.0 + args.threshold:
+                verdicts.append(f"sync_stall_ms {stall_ratio - 1:+.1%}")
         status = "FAIL " + ", ".join(verdicts) if verdicts else "ok"
         print(f"  {name:<44} ttft_p99 x{ttft_ratio:.3f} "
               f"thr x{thr_ratio:.3f}{hit_note}  {status}")

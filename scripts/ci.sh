@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 entry point.
 #
-#   scripts/ci.sh               fast tier-1: the @mixed suite (unified
-#                               mixed-batch plane) first, then the @paged
-#                               property suite (block allocator + cache
-#                               surgery), then the full suite minus @slow
-#                               model cases, then the benchmark smoke
+#   scripts/ci.sh               fast tier-1: the @sharded suite
+#                               (mesh-native engines, subprocesses with
+#                               4 forced host devices) first, then the
+#                               @mixed suite (unified mixed-batch
+#                               plane), then the @paged property suite
+#                               (block allocator + cache surgery), then
+#                               the full suite minus @slow model cases,
+#                               then the benchmark smoke
 #                               (microbench + quick e2e_pd emitting
 #                               BENCH_e2e.json) guarded against the
 #                               committed baseline (>25% TTFT-p99 or
@@ -33,7 +36,16 @@
 #                               steps must post a strictly lower ITL p99
 #                               at equal-or-higher throughput than the
 #                               disjoint (prefill-prioritizing) ablation
-#                               [real_plane_mixed]
+#                               [real_plane_mixed].  Finally the sharded
+#                               DP+EP A/B on a 4-device forced-host
+#                               mesh — with the EP all-to-all verified
+#                               in the compiled step HLO, sbs-la's
+#                               aligned batch formation must post a
+#                               strictly lower TTFT p99 than immediate
+#                               dispatch at equal-or-higher throughput,
+#                               and the measured per-step sync time
+#                               calibrates CostModel.t_sync
+#                               [real_plane_sharded]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -68,6 +80,15 @@ if [[ "${1:-}" == "--real-smoke" ]]; then
                   "below disjoint at equal-or-higher throughput," \
                   "unfinished requests, or >600s)" >&2
              exit 1; }
+    echo "== real-plane sharded DP+EP A/B (sbs-la vs immediate, 600s budget) =="
+    PYTHONPATH=src timeout 600 python examples/serve_e2e.py \
+        --arch granite-moe-1b-a400m --timeout 150 \
+        --sharded-bench --bench-json BENCH_e2e.json \
+        || { echo "sharded smoke FAILED (EP all-to-all absent from step" \
+                  "HLO, sbs-la ttft_p99 not strictly below immediate at" \
+                  "equal-or-higher throughput, unfinished requests, or" \
+                  ">600s)" >&2
+             exit 1; }
     echo "REAL SMOKE OK"
     exit 0
 fi
@@ -76,13 +97,17 @@ echo "== tier-1 tests =="
 if [[ "${1:-}" == "--full" ]]; then
     PYTHONPATH=src python -m pytest -q
 else
-    # mixed-batch suite first (fail fast on the newest subsystem), then
-    # the paged KV property suite, then everything else; @slow —
-    # including the heavyweight cross-plane equivalence sweep — stays
-    # behind --full
-    PYTHONPATH=src python -m pytest -q -m "mixed and not slow"
-    PYTHONPATH=src python -m pytest -q -m "paged and not slow and not mixed"
-    PYTHONPATH=src python -m pytest -q -m "not slow and not paged and not mixed"
+    # sharded mesh-native suite first (fail fast on the newest
+    # subsystem; its multi-device cases subprocess with their own
+    # forced host devices), then mixed-batch, then the paged KV
+    # property suite, then everything else; @slow — including the
+    # heavyweight cross-plane equivalence sweep — stays behind --full
+    PYTHONPATH=src python -m pytest -q -m "sharded and not slow"
+    PYTHONPATH=src python -m pytest -q -m "mixed and not slow and not sharded"
+    PYTHONPATH=src python -m pytest -q \
+        -m "paged and not slow and not mixed and not sharded"
+    PYTHONPATH=src python -m pytest -q \
+        -m "not slow and not paged and not mixed and not sharded"
 fi
 
 echo "== benchmark smoke (microbench) =="

@@ -256,6 +256,54 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig, cache,
     return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
+def paged_cache_pspecs(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig,
+                       cache):
+    """Sharding for a PAGED (block-table) decode cache — the layout the
+    real serving plane keeps per deployment (models.model.init_paged_cache).
+
+    The sharded real engines merge every DP unit's rows into ONE cache:
+    slot s belongs to DP s // paged_slots and physical block b to DP
+    b // paged_pool_blocks, so BOTH leading pool dims shard naturally on
+    the data axes (DP d's rows live on mesh rank d) — that placement is
+    what turns the per-step collective into a genuine cross-DP barrier.
+    KV heads of attention pools go on the model axis when divisible.
+    Every rule is divisibility-guarded: a non-dividing dim replicates,
+    so the same function serves the (smaller, possibly non-dividing)
+    prefill-engine cache.  Works on concrete arrays, ShapeDtypeStructs,
+    or tracers — only `.shape` is read."""
+    rules = ShardingRules(cfg, mesh, par)
+    data = rules.data
+    model = rules.model
+    slots = cache["cur"].shape[0]
+    nblocks = cache["kv_pos"].shape[0]
+    s_ax = data if _fits(slots, mesh, data) else None
+    b_ax = data if _fits(nblocks, mesh, data) else None
+
+    def leaf(path, x):
+        keys = [_key_str(p) for p in path]
+        shape = x.shape
+        if keys[0] == "cur":
+            return P(s_ax)
+        if keys[0] == "kv_pos":
+            return P(b_ax, None)
+        if keys[0] == "block_tab":
+            return P(s_ax, None)
+        # group entries: (n, N_blocks, bs, ...) attention pools, or
+        # (n, slots, ...) per-slot entries (SSM state, enc-dec KV)
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2:
+            if shape[1] == nblocks:
+                spec[1] = b_ax
+            elif shape[1] == slots:
+                spec[1] = s_ax
+        if (len(shape) == 5 and shape[1] == nblocks and model
+                and _fits(shape[3], mesh, model)):
+            spec[3] = model          # (n, N, bs, K, hd): KV heads on TP
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
 def data_axes_of(mesh: Mesh, par: ParallelConfig) -> Tuple[str, ...]:
     axes = tuple(a for a in par.data_axes if a in mesh.axis_names)
     if "pod" in mesh.axis_names and "pod" not in axes:

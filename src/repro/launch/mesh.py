@@ -23,6 +23,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices[:need])
 
 
+def make_engine_mesh(data: int, model: int = 1):
+    """Mesh for the SHARDED real serving plane: one data-axis rank per
+    decode DP unit (the merged paged cache's slot/pool dims shard over
+    "data"), `model` ranks of tensor parallelism inside each DP.  CI
+    drives this with forced host devices
+    (XLA_FLAGS=--xla_force_host_platform_device_count=N, set BEFORE the
+    first jax import); production uses the real accelerator topology."""
+    import jax
+    need = data * model
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"sharded plane needs {need} devices for a ({data},{model}) "
+            f"data×model mesh, have {len(devices)} — force host devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before the first jax import")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devices[:need])
+
+
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CPU tests (requires forced host device count)."""
     import jax

@@ -92,14 +92,16 @@ def moe_block_ep(x: jnp.ndarray, params: Dict, mc: MoEConfig, mesh,
         laux = jax.lax.pmean(laux, all_axes)
 
         buckets, pos_tk = _local_dispatch(x_loc, top_w, top_e, E, C_dev)
-        # (E, C, D) -> (G, E_per·C, D) -> a2a -> (G source ranks, E_per·C, D)
+        # Dispatch all-to-all convention (both a2a calls in this body):
+        # tiled=True on a (G, E_per·C, D) operand SPLITS axis 0 across the
+        # EP group (slice g goes to rank g) and CONCATS the received
+        # slices back on axis 0 — so post-a2a axis 0 indexes the SOURCE
+        # rank, and slice s holds the E_per local experts' capacity rows
+        # that rank s routed to this device.  The combine a2a below is the
+        # exact inverse (same split/concat axis ⇒ self-inverse).
         b = buckets.reshape(G, E_per * C_dev, D)
-        b = jax.lax.all_to_all(b[None], ep_axes, split_axis=1,
-                               concat_axis=0, tiled=False)[..., 0, :, :] \
-            if False else jax.lax.all_to_all(
-                b, ep_axes, split_axis=0, concat_axis=0, tiled=True)
-        # now b: (G·1? ...) tiled=True: in (G, E_per·C, D) split axis0 over
-        # group, concat axis0 -> (G, E_per·C, D) where axis0 = source rank
+        b = jax.lax.all_to_all(b, ep_axes, split_axis=0, concat_axis=0,
+                               tiled=True)
         h = b.reshape(G, E_per, C_dev, D).transpose(1, 0, 2, 3)
         h = h.reshape(E_per, G * C_dev, D)
         g = jnp.einsum("ecd,edf->ecf", h, w_gate)

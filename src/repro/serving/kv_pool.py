@@ -46,23 +46,35 @@ class OutOfBlocks(RuntimeError):
 class BlockPool:
     """Fixed-capacity physical KV block allocator (one per decode DP).
 
-    ids run 1..num_blocks-1 (0 is the reserved null block); `alloc`
+    ids run base+1..base+num_blocks-1 (0 is the reserved null block, and
+    id `base` of a non-zero-based pool is never issued — it aliases
+    another pool's range boundary in the merged sharded cache); `alloc`
     returns the lowest free ids first so reuse is deterministic and the
     property tests can assert freed pages come back.  The free store is
     a binary heap: alloc/free are O(log n) per block where the old
     sorted-list store re-sorted the whole list on every free.
+
+    `base` exists for the SHARDED real plane: every decode DP keeps its
+    own allocator (admission control stays per-DP), but all DPs' blocks
+    live in ONE mesh-sharded device pool — DP d gets
+    `BlockPool(num_blocks, bs, base=d*num_blocks)` so its physical ids
+    index its own shard of the merged pool dimension and can never
+    collide with another DP's table rows.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, base: int = 0):
         if num_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (block 0 is reserved)")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        if base < 0:
+            raise ValueError("base must be >= 0")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.base = base
         # min-heap => deterministic lowest-id-first reuse (a sorted range
         # is already a valid heap, so no heapify needed here)
-        self._free: List[int] = list(range(1, num_blocks))
+        self._free: List[int] = list(range(base + 1, base + num_blocks))
         self._ref: Dict[int, int] = {}          # block id -> holders (>=1)
         # content-addressed page map: key -> block and its inverse, so
         # prefix-cache admission resolves cached token blocks to physical

@@ -31,6 +31,16 @@ The split point is the return value of `start_pass` / `start_step`:
 all scheduler-visible state mutation (Request bookkeeping, DecodeDPState
 accounting, KV handoff publication) is single-threaded; worker threads
 only run pure JAX computations on snapshots taken at submit time.
+
+MESH-NATIVE REAL ENGINES: the same real classes become sharded when
+their `EngineSpec` carries a `jax.sharding.Mesh` — per-DP state stays
+Python-side, but each pass/step submits ONE cross-device XLA program
+(params, merged paged cache, and batch rows sharded over the mesh's
+"data" axis; MoE routed through the explicit EP all-to-all), so the
+instance-level sync barrier this contract models is physically real.
+All multi-device work of a deployment serializes behind the spec's mesh
+lock — one device set, one collective program at a time (see
+DESIGN.md "Sharded real plane").
 """
 from __future__ import annotations
 

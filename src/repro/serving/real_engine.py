@@ -58,6 +58,7 @@ while a pass/step is in flight.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -87,6 +88,36 @@ from repro.serving.plane import ASYNC, PassResult, StartResult, UnifiedEngine
 # ---------------------------------------------------------------------------
 
 
+class _LockedJit:
+    """A jitted callable serialized behind the deployment's mesh lock.
+
+    One mesh is ONE shared device set, and XLA's CPU collective
+    rendezvous deadlocks when two multi-device programs interleave their
+    per-device participant launches (e.g. the prefill worker's chunk
+    all-reduce racing the decode worker's step all-to-all — both wait
+    forever for participants the other program's threads are holding).
+    So on the sharded plane every program runs exclusively: take the
+    lock, launch, block until the result is materialized, release.  This
+    is also physically honest — concurrent engines CONTEND for the one
+    mesh the way they would for one accelerator.
+
+    `lower()` forwards to the underlying jit so HLO probes
+    (`spec.jit_paged_decode.lower(...).compile().as_text()`) still work.
+    """
+
+    def __init__(self, fn, lock):
+        self._fn, self._lock = fn, lock
+
+    def __call__(self, *args, **kwargs):
+        with self._lock:
+            out = self._fn(*args, **kwargs)
+            jax.block_until_ready(out)
+            return out
+
+    def lower(self, *args, **kwargs):
+        return self._fn.lower(*args, **kwargs)
+
+
 @dataclasses.dataclass
 class EngineSpec:
     """Model + jit context shared by every engine of one deployment, so
@@ -99,7 +130,18 @@ class EngineSpec:
     `BlockPool` of max_batch·max_len/block_size blocks, with
     `decode_slots` (default 2×max_batch) cheap batch rows on top — so a
     paged DP admits by free-block count and sustains more concurrent
-    requests than the padded DP at equal memory."""
+    requests than the padded DP at equal memory.
+
+    With a `mesh` (sharded plane, paged only) the spec becomes
+    MESH-NATIVE: params are device_put with `distributed.sharding`
+    pspecs, every paged step jit is wrapped in
+    `annotate.activate(mesh, axis_map, ep_shard_map=True)` so MoE layers
+    take the explicit all-to-all EP path of `models.moe_ep`, and output
+    caches are pinned to `paged_cache_pspecs` layouts.  A decode
+    instance then merges its DP units' rows into ONE cache sharded over
+    the mesh's "data" axis — each step is a genuine cross-DP
+    synchronized program, which is where the paper's sync barrier
+    physically lives on this plane."""
     cfg: ModelConfig
     params: Any
     max_len: int = 256
@@ -110,6 +152,8 @@ class EngineSpec:
     pool_blocks: int = 0        # physical blocks per DP (0 = equal-memory)
     prefill_slots: int = 0      # page-native prefill rows (0 = auto)
     prefill_pool_blocks: int = 0  # page-native prefill pool (0 = auto)
+    mesh: Any = None            # jax.sharding.Mesh -> sharded engines
+    parallel: Any = None        # ParallelConfig (None = EP over the mesh)
 
     def __post_init__(self):
         cfg = self.cfg
@@ -144,6 +188,135 @@ class EngineSpec:
             self.jit_mixed = jax.jit(
                 lambda p, t, c, chunks, mask: mixed_step(cfg, p, t, c,
                                                          chunks, mask))
+        self.n_dp = 1
+        self.axis_map = None
+        self._mesh_lock = threading.RLock()
+        if self.mesh is not None:
+            self._init_sharded()
+
+    def _init_sharded(self) -> None:
+        """Turn the paged step jits into MESH programs.
+
+        Parameters are committed once with `param_pspecs` layouts; each
+        step fn is re-wrapped so (a) `annotate.activate(..,
+        ep_shard_map=True)` is live at trace time — MoE layers route
+        through `moe_block_ep`'s explicit all-to-all whenever the token
+        count divides the device count — and (b) the output cache is
+        pinned to its `paged_cache_pspecs` layout, computed from the
+        TRACED shapes so the same wrapper serves the merged decode
+        cache, the prefill cache, and any dry-run geometry."""
+        if not self.block_size:
+            raise ValueError(
+                "sharded engines are paged-only (set block_size > 0)")
+        import numpy as np
+        from repro.config.base import ParallelConfig
+        from repro.distributed import annotate
+        from repro.distributed.sharding import (
+            data_axes_of, named, paged_cache_pspecs, param_pspecs)
+        cfg, mesh = self.cfg, self.mesh
+        if self.parallel is None:
+            # EP over the WHOLE mesh when the expert count divides it
+            # (launch/dryrun's default_parallel rule) — on a data×1
+            # engine mesh this is what makes every decode step carry a
+            # cross-DP all-to-all
+            par = ParallelConfig()
+            mc = getattr(cfg, "moe", None)
+            E = mc.num_experts if mc is not None else 0
+            for cand in (("data", "model"), ("model",)):
+                n = int(np.prod([dict(mesh.shape).get(a, 1) for a in cand]))
+                if E and E % n == 0:
+                    par = dataclasses.replace(par, expert_axes=cand)
+                    break
+            self.parallel = par
+        par = self.parallel
+        self.n_dp = int(dict(mesh.shape)["data"])
+        model_size = int(dict(mesh.shape).get(par.model_axis, 1))
+        heads_ok = cfg.num_heads == 0 or cfg.num_heads % model_size == 0
+        self.axis_map = {
+            "tokens": data_axes_of(mesh, par),
+            "experts": tuple(a for a in par.expert_axes
+                             if a in mesh.axis_names),
+            "model": par.model_axis,
+            "attn_seq": None if heads_ok else par.model_axis,
+        }
+        self.params = jax.device_put(
+            self.params, named(mesh, param_pspecs(cfg, mesh, par,
+                                                  self.params)))
+
+        def sharded(fn):
+            def wrapped(p, t, c, *rest):
+                with annotate.activate(mesh, self.axis_map,
+                                       ep_shard_map=True):
+                    out = fn(p, t, c, *rest)
+                cspec = named(mesh, paged_cache_pspecs(cfg, mesh, par,
+                                                       out[-1]))
+                return out[:-1] + (
+                    jax.lax.with_sharding_constraint(out[-1], cspec),)
+            return jax.jit(wrapped)
+
+        self.jit_paged_decode = sharded(
+            lambda p, t, c: paged_decode_step(cfg, p, t, c))
+        self.jit_paged_prefill = sharded(
+            lambda p, t, c, slot: paged_prefill_step(cfg, p, t, c, slot))
+        self.jit_mixed = sharded(
+            lambda p, t, c, chunks, mask: mixed_step(cfg, p, t, c,
+                                                     chunks, mask))
+        # EVERY jit becomes a mesh program once params are sharded (the
+        # dense-path prefill chunk carries an all-reduce over the
+        # data-sharded expert weights, joins/gathers reshard sharded
+        # caches) — funnel them all through the mesh lock so no two
+        # multi-device programs ever interleave (see _LockedJit)
+        for name in ("jit_prefill_chunk", "jit_decode", "jit_join",
+                     "jit_paged_decode", "jit_paged_join",
+                     "jit_paged_prefill", "jit_gather_blocks",
+                     "jit_adopt_blocks", "jit_copy_block",
+                     "jit_clear_rows", "jit_mixed"):
+            setattr(self, name,
+                    _LockedJit(getattr(self, name), self._mesh_lock))
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    def device_lock(self):
+        """The deployment's mesh lock (a no-op context when unsharded).
+        Engine code holding it may nest jitted calls freely (RLock)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return self._mesh_lock
+
+    def run_eager(self, fn, *args):
+        """Run an EAGER (unjitted) op over sharded arrays under the mesh
+        lock, blocking until the result is materialized — eager dispatch
+        is async too, so without the barrier its device program could
+        still be in flight when the next step's collectives launch.
+        Plain passthrough on unsharded specs."""
+        if self.mesh is None:
+            return fn(*args)
+        with self._mesh_lock:
+            out = fn(*args)
+            jax.block_until_ready(out)
+        return out
+
+    def shard_cache(self, cache: Dict) -> Dict:
+        """Commit a freshly built paged cache to its mesh layout (no-op
+        for unsharded specs)."""
+        if self.mesh is None:
+            return cache
+        from repro.distributed.sharding import named, paged_cache_pspecs
+        return jax.device_put(cache, named(self.mesh, paged_cache_pspecs(
+            self.cfg, self.mesh, self.parallel, cache)))
+
+    def merged_paged_cache(self) -> Dict:
+        """ONE instance-wide decode cache holding every DP unit's rows
+        (sharded plane): slot s belongs to DP s // paged_slots, physical
+        block b to DP b // paged_pool_blocks — matching the per-DP
+        `BlockPool(base=...)` allocators — so both pool dims shard over
+        the mesh's data axis and DP d's rows live on mesh rank d."""
+        n = self.n_dp
+        return self.shard_cache(init_paged_cache(
+            self.cfg, n * self.paged_slots, n * self.paged_pool_blocks,
+            self.max_len, self.block_size))
 
     @property
     def paged(self) -> bool:
@@ -196,14 +369,14 @@ class EngineSpec:
         return init_cache(self.cfg, self.max_batch, self.max_len)
 
     def paged_cache(self) -> Dict:
-        return init_paged_cache(self.cfg, self.paged_slots,
-                                self.paged_pool_blocks, self.max_len,
-                                self.block_size)
+        return self.shard_cache(init_paged_cache(
+            self.cfg, self.paged_slots, self.paged_pool_blocks,
+            self.max_len, self.block_size))
 
     def prefill_paged_cache(self) -> Dict:
-        return init_paged_cache(self.cfg, self.paged_prefill_slots,
-                                self.paged_prefill_blocks, self.max_len,
-                                self.block_size)
+        return self.shard_cache(init_paged_cache(
+            self.cfg, self.paged_prefill_slots, self.paged_prefill_blocks,
+            self.max_len, self.block_size))
 
     def target_len(self, req: Request) -> int:
         if self.max_new:
@@ -451,9 +624,10 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
             ids = jnp.asarray(pad_block_table(fresh, nbt), jnp.int32)
             self.cache = self.spec.jit_clear_rows(self.cache, ids)
         tab = jnp.asarray(pad_block_table(ctx.table, nbt), jnp.int32)
-        self.cache = dict(self.cache)
-        self.cache["block_tab"] = self.cache["block_tab"].at[ctx.slot].set(tab)
-        self.cache["cur"] = self.cache["cur"].at[ctx.slot].set(ctx.claimed)
+        self.cache = self.spec.run_eager(
+            lambda c: dict(c, block_tab=c["block_tab"].at[ctx.slot].set(tab),
+                           cur=c["cur"].at[ctx.slot].set(ctx.claimed)),
+            self.cache)
         return True
 
     def start_pass(self, now: float) -> StartResult:
@@ -539,11 +713,12 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
         ids = (req.tokens or ())[ctx.consumed: ctx.consumed + tok]
         if ids:
             arr = jnp.asarray([ids], jnp.int32)
-            logits, ctx.cache = self.spec.jit_prefill_chunk(
-                self.spec.params, arr, ctx.cache)
-            ctx.consumed += len(ids)
-            if ctx.consumed >= req.input_len and ctx.first_token is None:
-                ctx.first_token = int(jnp.argmax(logits[0]))
+            with self.spec.device_lock():
+                logits, ctx.cache = self.spec.jit_prefill_chunk(
+                    self.spec.params, arr, ctx.cache)
+                ctx.consumed += len(ids)
+                if ctx.consumed >= req.input_len and ctx.first_token is None:
+                    ctx.first_token = int(jnp.argmax(logits[0]))
 
     def _run_chunk_paged(self, req: Request, tok: int) -> None:
         # worker thread: extend the request's cache row in place; the
@@ -554,12 +729,13 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
         if not ids:
             return
         arr = jnp.asarray([ids], jnp.int32)
-        logits, self.cache = self.spec.jit_paged_prefill(
-            self.spec.params, arr, self.cache, ctx.slot)
-        self.chunks_run += 1
-        ctx.consumed += len(ids)
-        if ctx.consumed >= req.input_len and ctx.first_token is None:
-            ctx.first_token = int(jnp.argmax(logits[0]))
+        with self.spec.device_lock():
+            logits, self.cache = self.spec.jit_paged_prefill(
+                self.spec.params, arr, self.cache, ctx.slot)
+            self.chunks_run += 1
+            ctx.consumed += len(ids)
+            if ctx.consumed >= req.input_len and ctx.first_token is None:
+                ctx.first_token = int(jnp.argmax(logits[0]))
 
     def finish_pass(self, now: float) -> PassResult:
         self._raise_worker_error()
@@ -604,7 +780,8 @@ class RealPrefillEngine(SimPrefillInstance, _WorkerOwner):
             self.binder.insert(req.tokens[:req.input_len], ctx.table,
                                first_token=ctx.first_token)
         if ctx.slot is not None:
-            self.cache = paged_cache_clear_slot(self.cache, ctx.slot)
+            self.cache = self.spec.run_eager(
+                paged_cache_clear_slot, self.cache, ctx.slot)
             self._free_slots.append(ctx.slot)
         self.pool.free(ctx.table)
 
@@ -676,6 +853,63 @@ class _DPPagedState(_DPDecodeState):
                 and need + extra_blocks <= self.pool.free_count)
 
 
+class _ShardedGroup:
+    """Instance-wide device state of the SHARDED decode plane: ONE merged
+    paged cache (slot s ↔ DP s // paged_slots, physical block b ↔ DP
+    b // paged_pool_blocks) whose pool dims are sharded over the mesh's
+    data axis.  A step is a single cross-DP jitted program — the paper's
+    DP sync barrier is the program's own collectives (the EP all-to-all
+    and the data-axis layout transfers), not the worker's serial per-DP
+    job loop the single-device plane approximates it with."""
+
+    def __init__(self, spec: EngineSpec):
+        n = spec.n_dp
+        self.cache: Dict = spec.merged_paged_cache()
+        self.slots: List[Optional[Request]] = [None] * (n * spec.paged_slots)
+        self.next_tok: List[int] = [0] * (n * spec.paged_slots)
+
+
+class _DPShardedState(_DPPagedState):
+    """One DP unit's VIEW of the merged sharded cache.  Admission control
+    stays strictly per-DP — the `BlockPool` hands out GLOBAL block ids
+    from this DP's base-offset range, `free_slot` scans this DP's global
+    slot range, the optional prefix binder is private — while `cache`
+    reads/writes through to the shared group, so every jitted join /
+    clear / step mutation lands in the one merged device cache and the
+    inherited `_apply_joins`/`finish_step` machinery works unchanged."""
+
+    def __init__(self, spec: EngineSpec, group: _ShardedGroup, k: int,
+                 share_prefix: bool = False):
+        self.spec = spec
+        self.group = group
+        S = spec.paged_slots
+        self.lo, self.hi = k * S, (k + 1) * S
+        self.slots = group.slots            # SHARED global slot list
+        self.next_tok = group.next_tok      # SHARED global feed tokens
+        self.pool = BlockPool(spec.paged_pool_blocks, spec.block_size,
+                              base=k * spec.paged_pool_blocks)
+        self.held: Dict[int, List[int]] = {}
+        self.binder: Optional[PagePrefixBinder] = (
+            PagePrefixBinder(self.pool) if share_prefix else None)
+
+    @property
+    def cache(self) -> Dict:
+        return self.group.cache
+
+    @cache.setter
+    def cache(self, value: Dict) -> None:
+        self.group.cache = value
+
+    def free_slot(self) -> Optional[int]:
+        for i in range(self.lo, self.hi):
+            if self.slots[i] is None:
+                return i
+        return None
+
+    def occupied(self) -> bool:
+        return any(r is not None for r in self.slots[self.lo:self.hi])
+
+
 class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
     """Continuous batched decode: join-on-handoff / leave-on-finish per
     step.  Request/DPState bookkeeping (token counts, first-token stamps,
@@ -693,8 +927,19 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         if share_prefix and not spec.prefix_sharable:
             raise ValueError(
                 "share_prefix requires a paged attention-only config")
-        if spec.paged:
+        if spec.sharded:
+            if len(dp_ids) != spec.n_dp:
+                raise ValueError(
+                    f"a sharded decode instance must own exactly the "
+                    f"mesh's data axis: {len(dp_ids)} dp_ids vs "
+                    f"data={spec.n_dp}")
+            self._group = _ShardedGroup(spec)
             self._dp: Dict[int, _DPDecodeState] = {
+                d: _DPShardedState(spec, self._group, k,
+                                   share_prefix=share_prefix)
+                for k, d in enumerate(dp_ids)}
+        elif spec.paged:
+            self._dp = {
                 d: _DPPagedState(spec, share_prefix=share_prefix)
                 for d in dp_ids}
         else:
@@ -708,6 +953,13 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         self.peak_resident = 0      # max concurrent resident requests
         self.cow_copies = 0         # eager tail copy-on-writes at join
         self.blocks_shared = 0      # payload rows skipped via shared pages
+        # per-step occupancy samples (worker appends, read after the run):
+        # (wall seconds, active decode rows, cache rows stepped) — the
+        # sharded bench derives sync-stall = Σ dur·(1 − active/rows) from
+        # these, i.e. time the cross-DP program spent advancing idle rows
+        self.step_samples: List[Tuple[float, int, int]] = []
+        self._step_active = 0
+        self._step_rows = 0
 
     # -- lifecycle -------------------------------------------------------
     def bind_loop(self, loop) -> None:
@@ -765,9 +1017,10 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         if self.spec.paged:
             # eager (unjitted), like drain(): swaps are rare and per-slot
             # jit specialisation would compile mid-overload
-            self.bus.gen(rid).cache = paged_cache_take(
-                self.spec.cfg, st.cache, slot)
-            st.cache = paged_cache_clear_slot(st.cache, slot)
+            self.bus.gen(rid).cache = self.spec.run_eager(
+                paged_cache_take, self.spec.cfg, st.cache, slot)
+            st.cache = self.spec.run_eager(
+                paged_cache_clear_slot, st.cache, slot)
             st.pool.free(st.held.pop(rid))
         else:
             self.bus.gen(rid).cache = cache_take(st.cache, slot)
@@ -909,8 +1162,10 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
             new = st.pool.alloc(1)[0]
             old = table[lw]
             st.cache = self.spec.jit_copy_block(st.cache, old, new)
-            st.cache["block_tab"] = (
-                st.cache["block_tab"].at[slot, lw].set(new))
+            st.cache = self.spec.run_eager(
+                lambda c: dict(c, block_tab=c["block_tab"]
+                               .at[slot, lw].set(new)),
+                st.cache)
             table[lw] = new
             st.pool.free([old])
             self.cow_copies += 1
@@ -934,8 +1189,21 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
                 continue
             self._participants[d] = [
                 (r, self._slot_of[r.rid][1]) for r in self.running[d]]
+            if self.spec.sharded:
+                continue            # ONE merged cross-DP job, built below
             toks = jnp.asarray([[t] for t in st.next_tok], jnp.int32)
             jobs.append((d, st.cache, toks))
+        if self.spec.sharded and self._participants:
+            # the instance sync barrier now lives INSIDE the program: one
+            # step over the merged cache advances every DP's rows under
+            # the same mesh collectives (dp_id -1 marks the merged job)
+            g = self._group
+            toks = jnp.asarray([[t] for t in g.next_tok], jnp.int32)
+            jobs.append((-1, g.cache, toks))
+        self._step_active = sum(len(v) for v in self._participants.values())
+        self._step_rows = (len(self._group.slots) if self.spec.sharded
+                           else sum(len(self._dp[d].slots)
+                                    for d in self._participants))
         epoch = self.epoch
         post = self._post
         self._worker.submit(lambda: self._exec_step(jobs, epoch, post))
@@ -950,13 +1218,24 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
         try:
             res: Dict[int, Tuple[Dict, List[int]]] = {}
             for dp_id, cache, toks in jobs:
-                logits, new_cache = step(self.spec.params, toks, cache)
-                nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
-                res[dp_id] = (new_cache, nxt)
+                with self.spec.device_lock():
+                    logits, new_cache = step(self.spec.params, toks, cache)
+                    nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                if dp_id < 0:
+                    # merged cross-DP job: slots are global, so the same
+                    # (cache, next-token) pair fans back to every
+                    # participating DP — finish_step indexes nxt by the
+                    # participant's global slot unchanged
+                    for d in self._participants:
+                        res[d] = (new_cache, nxt)
+                else:
+                    res[dp_id] = (new_cache, nxt)
             self._result = res
         except BaseException as e:      # surface on the runtime thread
             self._error = e
-        post("step_end", (self, epoch, time.monotonic() - t0))
+        dur = time.monotonic() - t0
+        self.step_samples.append((dur, self._step_active, self._step_rows))
+        post("step_end", (self, epoch, dur))
 
     def finish_step(self, now: float, dp_states) -> List[Request]:
         self._raise_worker_error()
@@ -979,7 +1258,8 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
                 # drop the table row FIRST: the now-inactive slot keeps
                 # stepping on garbage, and its writes must route to the
                 # null block, never to pages the pool re-issues
-                st.cache = paged_cache_clear_slot(st.cache, slot)
+                st.cache = self.spec.run_eager(
+                    paged_cache_clear_slot, st.cache, slot)
                 st.pool.free(st.held.pop(req.rid))
         if self._join_finished:
             # requests satisfied at join time (never occupied a slot):
@@ -999,9 +1279,10 @@ class RealDecodeEngine(SimDecodeInstance, _WorkerOwner):
                 # eager (unjitted), like the padded cache_take branch: the
                 # drain path is rare and per-slot jit specialisation would
                 # compile a fresh gather program mid-recovery
-                self.bus.gen(rid).cache = paged_cache_take(
-                    self.spec.cfg, st.cache, slot)
-                st.cache = paged_cache_clear_slot(st.cache, slot)
+                self.bus.gen(rid).cache = self.spec.run_eager(
+                    paged_cache_take, self.spec.cfg, st.cache, slot)
+                st.cache = self.spec.run_eager(
+                    paged_cache_clear_slot, st.cache, slot)
                 st.pool.free(st.held.pop(rid))
             else:
                 self.bus.gen(rid).cache = cache_take(st.cache, slot)
@@ -1108,9 +1389,10 @@ class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
             # reused pages keep their previous tenant's kv_pos; stale
             # pos <= the reader's cursor would alias as valid history
             st.cache = self.spec.jit_clear_rows(st.cache, arr)
-            st.cache = dict(st.cache)
-            st.cache["block_tab"] = st.cache["block_tab"].at[slot].set(arr)
-            st.cache["cur"] = st.cache["cur"].at[slot].set(0)
+            st.cache = self.spec.run_eager(
+                lambda c: dict(c, block_tab=c["block_tab"].at[slot].set(arr),
+                               cur=c["cur"].at[slot].set(0)),
+                st.cache)
             st.slots[slot] = req
             self._slot_of[req.rid] = (dp_id, slot)
             self._consumed[req.rid] = 0
@@ -1210,12 +1492,39 @@ class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
             jobs.append((d, st.cache, toks, tuple(chunks), mask))
         if not jobs:
             return None
+        if self.spec.sharded:
+            jobs = self._merge_sharded_jobs(jobs)
         self.busy = True
         self.steps += 1
+        self._step_active = sum(len(v) for v in self._participants.values())
+        self._step_rows = (
+            len(self._group.slots) if self.spec.sharded
+            else sum(len(self._dp[d].slots)
+                     for d, _c, toks, _ch, _m in jobs if toks is not None))
         epoch = self.epoch
         post = self._post
         self._worker.submit(lambda: self._exec_mixed(jobs, epoch, post))
         return ASYNC
+
+    def _merge_sharded_jobs(self, jobs):
+        """Collapse the per-DP mixed jobs into ONE cross-DP program over
+        the merged cache: global decode-token rows, every DP's chunk
+        grant in one tuple (slot ids are already global — grant order
+        matches `self._grants` iteration order, which the fan-back in
+        `_exec_mixed` relies on), one decode mask over the merged slot
+        axis.  The mask is unconditional whenever anything decodes: all
+        DPs share the one cache, so another DP's prefilling (or
+        disjoint-stalled) resident rows must never see a decode write."""
+        g = self._group
+        chunks = tuple(c for _d, _c, _t, cs, _m in jobs for c in cs)
+        if not self._participants:
+            return [(-1, g.cache, None, chunks, None)]
+        toks = jnp.asarray([[t] for t in g.next_tok], jnp.int32)
+        m = [False] * len(g.slots)
+        for lst in self._participants.values():
+            for _r, s in lst:
+                m[s] = True
+        return [(-1, g.cache, toks, chunks, jnp.asarray(m))]
 
     def _exec_mixed(self, jobs, epoch: int, post) -> None:
         # worker thread: one fused mixed step per DP with decode rows
@@ -1227,32 +1536,51 @@ class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
             res: Dict[int, Tuple[Dict, List[int]]] = {}
             cres: Dict[int, List[int]] = {}
             for dp_id, cache, toks, chunks, mask in jobs:
-                if toks is None:
-                    new_cache = cache
-                    clogits = []
-                    for ctoks, slot in chunks:
-                        lg, new_cache = self.spec.jit_paged_prefill(
-                            self.spec.params, ctoks, new_cache, slot)
-                        clogits.append(lg)
-                    nxt: List[int] = []
-                elif mask is not None:
-                    logits, clogits, new_cache = self.spec.jit_mixed(
-                        self.spec.params, toks, cache, chunks, mask)
-                    if chunks:
-                        self.mixed_steps += 1
-                    nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
-                else:
-                    logits, new_cache = self.spec.jit_paged_decode(
-                        self.spec.params, toks, cache)
-                    clogits = ()
-                    nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                with self.spec.device_lock():
+                    if toks is None:
+                        new_cache = cache
+                        clogits = []
+                        for ctoks, slot in chunks:
+                            lg, new_cache = self.spec.jit_paged_prefill(
+                                self.spec.params, ctoks, new_cache, slot)
+                            clogits.append(lg)
+                        nxt: List[int] = []
+                    elif mask is not None:
+                        logits, clogits, new_cache = self.spec.jit_mixed(
+                            self.spec.params, toks, cache, chunks, mask)
+                        if chunks:
+                            self.mixed_steps += 1
+                        nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                    else:
+                        logits, new_cache = self.spec.jit_paged_decode(
+                            self.spec.params, toks, cache)
+                        clogits = ()
+                        nxt = [int(x) for x in jnp.argmax(logits, axis=-1)]
+                    firsts = [int(jnp.argmax(lg[0])) for lg in clogits]
+                if dp_id < 0:
+                    # merged cross-DP job: one cache/next-token pair fans
+                    # back to every decoding DP (slots are global); the
+                    # flat chunk firsts split by per-DP grant counts in
+                    # the same order _merge_sharded_jobs flattened them
+                    i = 0
+                    for d, lst in self._grants.items():
+                        cres[d] = firsts[i:i + len(lst)]
+                        i += len(lst)
+                    if self._participants:
+                        for d in self._participants:
+                            res[d] = (new_cache, nxt)
+                    else:
+                        res[self.dp_ids[0]] = (new_cache, [])
+                    continue
                 res[dp_id] = (new_cache, nxt)
-                cres[dp_id] = [int(jnp.argmax(lg[0])) for lg in clogits]
+                cres[dp_id] = firsts
             self._result = res
             self._chunk_result = cres
         except BaseException as e:      # surface on the runtime thread
             self._error = e
-        post("step_end", (self, epoch, time.monotonic() - t0))
+        dur = time.monotonic() - t0
+        self.step_samples.append((dur, self._step_active, self._step_rows))
+        post("step_end", (self, epoch, dur))
 
     def finish_step(self, now: float, dp_states) -> List[Request]:
         cres = self._chunk_result or {}
@@ -1300,7 +1628,8 @@ class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
                                   reserve_len=req.input_len + req.output_len)
                     self._last_emit.pop(req.rid, None)
                     self._slot_of.pop(req.rid)
-                    st.cache = paged_cache_clear_slot(st.cache, slot)
+                    st.cache = self.spec.run_eager(
+                        paged_cache_clear_slot, st.cache, slot)
                     st.slots[slot] = None
                     st.pool.free(st.held.pop(req.rid))
                     finished.append(req)
@@ -1324,7 +1653,8 @@ class RealUnifiedEngine(RealDecodeEngine, UnifiedEngine):
             st = self._dp[d]
             for req in pre[d]:
                 _dp, slot = self._slot_of.pop(req.rid)
-                st.cache = paged_cache_clear_slot(st.cache, slot)
+                st.cache = self.spec.run_eager(
+                    paged_cache_clear_slot, st.cache, slot)
                 st.slots[slot] = None
                 st.pool.free(st.held.pop(req.rid))
                 del self._consumed[req.rid]

@@ -74,7 +74,8 @@ class RealSBSServer:
                  max_new: int = 8,
                  watchdog_multiplier: float = 0.0,
                  spec: Optional[EngineSpec] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 mesh=None):
         self.cfg = cfg
         scfg = serving_cfg or _default_serving_config()
         self.scfg = scfg
@@ -101,12 +102,18 @@ class RealSBSServer:
         # scfg.block_size > 0 the decode plane is PAGED: same KV memory
         # budget (max_batch_per_dp × max_len tokens per DP), block-pool
         # admission, resolved_decode_slots batch rows.
+        # `mesh` turns the deployment SHARDED (paged only): the spec's
+        # step jits become cross-device mesh programs with the EP
+        # all-to-all active, and each decode instance merges its DP
+        # units' rows into one data-axis-sharded cache — so the mesh's
+        # data size must equal decode_dp_per_instance
         self.spec = spec or EngineSpec(
             cfg, params, max_len=max_len,
             max_batch=scfg.max_batch_per_dp, max_new=max_new,
             block_size=scfg.block_size,
             decode_slots=(scfg.resolved_decode_slots
-                          if scfg.block_size else 0))
+                          if scfg.block_size else 0),
+            mesh=mesh)
         # prefix_cache turns on block-granular prefix reuse end to end:
         # page-native prefill engines with shared refcounted pages (a
         # cached prefix's chunks are never computed), PageHandoff

@@ -24,6 +24,11 @@ def pytest_configure(config):
         "markers", "mixed: unified mixed-batch plane suite (Sarathi-style "
         "piggybacking + length-bucketed formation) — runs FIRST in the "
         "fast tier (scripts/ci.sh), before the paged suite")
+    config.addinivalue_line(
+        "markers", "sharded: mesh-native real-plane suite — multi-device "
+        "cases run in subprocesses with forced host devices (the device "
+        "count must be pinned before jax initializes), so the suite is "
+        "offline-safe under the normal 1-device platform")
 
 
 # ---------------------------------------------------------------------------
